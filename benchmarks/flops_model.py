@@ -1,0 +1,202 @@
+"""Analytic FLOPs / HBM-traffic / collective models per (arch x shape).
+
+Why analytic: XLA's cost_analysis counts while-loop (lax.scan) bodies ONCE,
+so compiled-artifact numbers need per-cycle extrapolation; the analytic model
+is exact closed-form math over the known dims, causal-aware, and
+MoE-capacity-aware.  benchmarks/roofline.py cross-checks it against HLO
+probes (scan-unrolled 1-cycle/2-cycle compiles) and uses HLO-parsed numbers
+for the collective term (the real GSPMD artifact we iterate on in §Perf).
+
+All quantities are GLOBAL per step; divide by chip count for per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.configs import ModelConfig, ShapeConfig
+
+# TPU v5e
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link (assignment constant)
+BYTES = 2  # bf16 activations/params
+
+
+# ---------------------------------------------------------------------------
+# forward FLOPs
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer_fwd(cfg: ModelConfig, B: int, S: int, window: int = 0,
+                    kv_len: int = 0) -> Dict[str, float]:
+    """One attention layer, forward. kv_len>0 => decode (S new tokens vs cache)."""
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    proj = 2 * B * S * d * (qd + 2 * kvd) + 2 * B * S * qd * d  # qkv + o
+    if kv_len:  # decode: every new token attends kv_len keys (QK^T + PV)
+        att = 4 * B * S * kv_len * qd
+    elif window and window < S:  # banded local attention
+        att = 4 * B * S * window * qd
+    else:  # causal full: sum_i (i+1) = S(S+1)/2 attended positions
+        att = 4 * B * (S * (S + 1) / 2) * qd
+    return {"proj": proj, "attention": att}
+
+
+def _mlp_layer_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    if cfg.num_experts:
+        cap_mult = cfg.experts_per_token * cfg.moe_capacity_factor
+        router = 2 * B * S * cfg.d_model * cfg.num_experts
+        return router + n_mats * 2 * B * S * cfg.d_model * cfg.d_ff * cap_mult
+    return n_mats * 2 * B * S * cfg.d_model * cfg.d_ff
+
+
+def _ssm_layer_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    d, di, ds, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_actual
+    t = B * S
+    f = 2 * t * d * 2 * di  # in_proj
+    f += 2 * t * cfg.d_conv * di  # conv
+    f += 2 * t * di * (dtr + 2 * ds)  # x_proj
+    f += 2 * t * dtr * di  # dt_proj
+    f += 10 * t * di * ds  # discretize + scan + C contraction
+    f += 6 * t * di  # D, gating
+    f += 2 * t * di * d  # out_proj
+    return f
+
+
+def _rglru_layer_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    d, di = cfg.d_model, cfg.d_inner
+    t = B * S
+    f = 2 * t * d * di * 2  # y + gate branches
+    f += 2 * t * cfg.d_conv * di
+    f += 2 * t * di * di * 2  # r/i gate projections
+    f += 12 * t * di  # gates, scan, sqrt
+    f += 2 * t * di * d  # out
+    return f
+
+
+def _head_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    return 2 * B * S * cfg.d_model * cfg.padded_vocab
+
+
+def fwd_flops(cfg: ModelConfig, B: int, S: int, *, kv_len: int = 0,
+              with_loss: bool = True) -> Dict[str, float]:
+    """Global forward FLOPs by component."""
+    out = {"proj": 0.0, "attention": 0.0, "mlp": 0.0, "ssm": 0.0, "rglru": 0.0}
+    for kind in cfg.layer_kinds():
+        if kind in ("attn", "local_attn"):
+            w = cfg.window if kind == "local_attn" else 0
+            a = _attn_layer_fwd(cfg, B, S, window=w, kv_len=kv_len)
+            out["proj"] += a["proj"]
+            out["attention"] += a["attention"]
+            out["mlp"] += _mlp_layer_fwd(cfg, B, S)
+        elif kind == "ssm":
+            out["ssm"] += _ssm_layer_fwd(cfg, B, S)
+        elif kind == "rglru":
+            out["rglru"] += _rglru_layer_fwd(cfg, B, S)
+            out["mlp"] += _mlp_layer_fwd(cfg, B, S)
+    if with_loss:
+        out["head"] = _head_fwd(cfg, B, S)
+    return out
+
+
+def step_flops(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, float]:
+    """Global FLOPs for the cell's step function."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        f = fwd_flops(cfg, B, S)
+        total_fwd = sum(f.values())
+        mult = 4.0 if cfg.remat != "none" else 3.0  # fwd + 2x bwd (+ remat fwd)
+        return {"total": total_fwd * mult, "fwd": total_fwd, "by_comp": f, "mult": mult}
+    if shape.kind == "prefill":
+        f = fwd_flops(cfg, B, S, with_loss=False)
+        f["head"] = 2 * B * cfg.d_model * cfg.padded_vocab  # last position only
+        return {"total": sum(f.values()), "fwd": sum(f.values()), "by_comp": f, "mult": 1.0}
+    # decode: one token against a cache of length S
+    f = fwd_flops(cfg, B, 1, kv_len=S, with_loss=False)
+    f["head"] = 2 * B * cfg.d_model * cfg.padded_vocab
+    return {"total": sum(f.values()), "fwd": sum(f.values()), "by_comp": f, "mult": 1.0}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The assignment's MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE)."""
+    n = cfg.num_active_params() if cfg.num_experts else cfg.num_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n * tokens  # forward-only
+    else:
+        return 2 * n * shape.global_batch  # one token per sequence
+    return 6 * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic model (deployment: Pallas flash kernels, remat, ZeRO)
+# ---------------------------------------------------------------------------
+
+
+def step_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, chips: int) -> float:
+    """Global HBM bytes per step (so per-chip = /chips).
+
+    Model: weights are read from HBM once per pass after the ZeRO gather
+    (fwd, remat-fwd, bwd => 3x for train, 1x inference); optimizer state
+    read+write; activations ~6 tensor r/w per layer; attention KV streamed
+    once per query chunk pair (flash); KV-cache read for decode; embedding
+    and logits traffic."""
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.num_params()
+    tok = B * (1 if shape.kind == "decode" else S)
+    d = cfg.d_model
+    passes = 3 if shape.kind == "train" else 1
+    w = N * BYTES * passes
+    if shape.kind == "train":
+        sd = 2 if cfg.opt_state_dtype == "bfloat16" else 4
+        w += N * (2 * sd * 2 + BYTES * 2)  # m,v read+write; p read+write; grads
+    act = 0.0
+    for kind in cfg.layer_kinds():
+        per_tok = {"attn": 8, "local_attn": 8, "ssm": 10, "rglru": 10}[kind] * d * BYTES
+        act += tok * per_tok * (2 if shape.kind == "train" else 1)
+        if kind in ("attn", "local_attn"):
+            # flash attention KV streaming: each q block reads the allowed KV band
+            if shape.kind == "decode":
+                act += B * S * cfg.kv_dim * 2 * BYTES  # read whole cache
+            else:
+                eff = min(cfg.window, S) if kind == "local_attn" and cfg.window else S
+                nq = max(1, S // max(cfg.block_q, 1))
+                frac = 0.5 if eff == S else eff / S
+                act += B * nq * (eff * frac if eff == S else eff) * cfg.kv_dim * 2 * BYTES
+    logits_tok = B if shape.kind != "train" else tok
+    act += logits_tok * cfg.padded_vocab * 4  # fp32 logits write+read once
+    return w + act
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+
+def terms(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+          collective_bytes_per_chip: float = 0.0) -> Dict[str, float]:
+    fl = step_flops(cfg, shape)
+    hbm = step_hbm_bytes(cfg, shape, chips)
+    t_compute = fl["total"] / chips / PEAK_FLOPS
+    t_memory = hbm / chips / HBM_BW
+    t_coll = collective_bytes_per_chip / ICI_BW
+    mf = model_flops(cfg, shape)
+    return {
+        "flops_total": fl["total"],
+        "hbm_bytes": hbm,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_coll,
+        "bottleneck": max(
+            [("compute", t_compute), ("memory", t_memory), ("collective", t_coll)],
+            key=lambda kv: kv[1],
+        )[0],
+        "model_flops": mf,
+        "useful_ratio": mf / fl["total"] if fl["total"] else 0.0,
+        "roofline_frac": max(t_compute, 1e-30)
+        / max(t_compute, t_memory, t_coll, 1e-30),
+    }

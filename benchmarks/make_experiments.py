@@ -1,0 +1,126 @@
+"""Render the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+experiments/{dryrun,roofline}/*.json sweeps.
+
+  PYTHONPATH=src python -m benchmarks.make_experiments > experiments/SECTIONS.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, shape_applicable
+
+GIB = 2**30
+
+
+def _load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        key = (r["arch"], r["shape"], r["mesh"], os.path.basename(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def dryrun_section() -> str:
+    recs = _load("experiments/dryrun")
+    lines = [
+        "### Per-cell dry-run (lower + compile on the production meshes)",
+        "",
+        "| arch | shape | mesh | status | compile (s) | temp/device (GiB) | host temp (GiB) | collectives (kinds, HLO-text counts¹) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = n_fail = 0
+    for a in ASSIGNED_ARCHS:
+        for s in SHAPES:
+            if not shape_applicable(a, s):
+                continue
+            for mesh in ("single", "multi"):
+                r = recs.get((a, s, mesh))
+                if r is None:
+                    lines.append(f"| {a} | {s} | {mesh} | MISSING | | | | |")
+                    n_fail += 1
+                    continue
+                if not r["ok"]:
+                    lines.append(f"| {a} | {s} | {mesh} | **FAIL** {r['error'][:60]} | | | | |")
+                    n_fail += 1
+                    continue
+                n_ok += 1
+                m = r["memory"]
+                coll = ", ".join(f"{k}×{v['count']}" for k, v in sorted(r["collectives"].items()))
+                lines.append(
+                    f"| {a} | {s} | {mesh} | OK | {r['compile_s']} | "
+                    f"{m['temp_bytes']/GIB:.2f} | {m['host_temp_bytes']/GIB:.2f} | {coll} |"
+                )
+    lines += [
+        "",
+        f"**{n_ok} cells compiled, {n_fail} failed/missing.** "
+        "¹ Counts are per HLO text occurrence — lax.scan bodies appear once; "
+        "true per-step collective bytes are extrapolated in §Roofline.",
+        "",
+        "Skipped cells (assignment rule: `long_500k` needs sub-quadratic attention):",
+        "granite-moe-1b-a400m, llama4-maverick-400b-a17b, musicgen-medium, yi-34b,",
+        "qwen1.5-4b, mistral-nemo-12b, internvl2-2b (pure full attention) — noted in",
+        "DESIGN.md §Shape/cell policy.  llama3.2-1b × long_500k runs as an EXTRA",
+        "cell (FPDT host-streamed KV decode), beyond the assignment's requirement.",
+    ]
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    recs = _load("experiments/roofline")
+    lines = [
+        "### Roofline terms per cell (single-pod 16x16 = 256 chips, TPU v5e)",
+        "",
+        "compute = FLOPs/(chips·197e12); memory = HBM bytes/(chips·819e9);",
+        "collective = HLO-measured bytes/chip / 50e9 (probe-extrapolated, see",
+        "benchmarks/roofline.py).  `useful` = MODEL_FLOPS (6·N·D, 6·N_active·D",
+        "for MoE) / total FLOPs.",
+        "",
+        "| arch | shape | u | compute (ms) | memory (ms) | collective (ms) | bottleneck | roofline frac | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ASSIGNED_ARCHS:
+        for s in SHAPES:
+            if not shape_applicable(a, s):
+                continue
+            r = recs.get((a, s, "single"))
+            if r is None:
+                lines.append(f"| {a} | {s} | | | | | MISSING | | | |")
+                continue
+            note = ""
+            if r["useful_ratio"] > 1.0:
+                note = "6·N·D counts embeddings the fwd never multiplies"
+            lines.append(
+                f"| {a} | {s} | {r['chunks']} | {r['t_compute']*1e3:.2f} | "
+                f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+                f"{r['bottleneck']} | {r['roofline_frac']:.2f} | "
+                f"{r['useful_ratio']:.2f} | {note} |"
+            )
+    # dominant-term summary + one-sentence movers
+    lines += ["", "Dominant-term notes (what would move the bottleneck down):", ""]
+    movers = {
+        "collective": "ZeRO weight all-gathers dominate at short sequence: raise "
+        "tokens/chip (data-axis microbatching), cache gathered weights across "
+        "fwd/remat (remat policy), or quantize gathers (int8 weights on wire).",
+        "memory": "decode is weight-read bound: multi-token speculative decode, "
+        "weight quantization, or batch growth amortize the HBM sweep.",
+        "compute": "already compute-bound: reduce non-useful FLOPs (causal "
+        "block pruning, remat policy that skips attention recompute).",
+    }
+    seen = set()
+    for r in recs.values():
+        if r["mesh"] == "single" and r["bottleneck"] not in seen:
+            seen.add(r["bottleneck"])
+            lines.append(f"* **{r['bottleneck']}** — {movers[r['bottleneck']]}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(dryrun_section())
+    print()
+    print(roofline_section())

@@ -1,0 +1,146 @@
+"""Per-device memory model for long-context training (paper Tables 1/3, Fig 12).
+
+Components (bytes, batch=1 as in the paper's evaluation):
+  model states  — DeepSpeed convention: bf16 params (2N) + bf16 grads (2N) +
+                  fp32 master/m/v (12N); ZeRO-1 shards the 12N, ZeRO-2 also
+                  grads, ZeRO-3 everything; Megatron-TP divides all by tp.
+  checkpointed activations — with AC: one saved input per layer
+                  [1, S_local, d]; OC moves them to host (0 device bytes).
+  working set   — the live-tensor peak of ONE transformer block
+                  (paper Table 2), which FPDT divides by the chunk count:
+      baseline Ulysses fwd:  hidden(1) + qkv(3) + a2a recv(3) + attn io(4)
+      baseline bwd:          ~2x fwd + flash bwd inputs (8)  [Table 2 row 2]
+      FPDT(u):               the same but on S/u tokens; without offload the
+                             pipeline still holds all u KV chunks (2 x S);
+                             with offload only 2 chunk-sized KV tiles + the
+                             double buffer live on device.
+  logits spike  — chunked loss bounds it to ~2 hidden-sized chunks (§5.4).
+
+Calibration anchors (paper Table 3, 8B Llama3 x 8 GPUs): TP -> 32K/64.3G,
+TP+AC+OC -> 512K/78.7G, UL+ZeRO3+AC+OC -> 512K/60.1G, FPDT -> 4M/68.0G.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.configs import ModelConfig
+
+GB = 1024 ** 3
+A100 = 80 * GB
+BYTES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    n: int  # GPUs
+    tp: int = 1  # Megatron tensor(+sequence) parallel degree
+    ulysses: bool = False  # sequence parallel over all n
+    zero: int = 0  # 0/1/2/3 (ZeRO stage across the n GPUs)
+    ac: bool = False  # activation checkpointing
+    oc: bool = False  # AC offloaded to host
+    fpdt_u: int = 1  # sequence chunks
+    offload: bool = False  # FPDT KV offload to host
+
+
+def model_state_bytes(cfg: ModelConfig, st: Strategy) -> float:
+    N = cfg.num_params()
+    p, g, o = 2 * N, 2 * N, 12 * N
+    if st.tp > 1:
+        p, g, o = p / st.tp, g / st.tp, o / st.tp
+    if st.zero >= 1:
+        o = o / st.n
+    if st.zero >= 2:
+        g = g / st.n
+    if st.zero >= 3:
+        p = p / st.n
+    return p + g + o
+
+
+SPIKE = 1.25  # transient allocator/bucket spike multiplier (calibrated)
+
+
+def activation_bytes(cfg: ModelConfig, S: int, st: Strategy) -> Dict[str, float]:
+    d, L = cfg.d_model, cfg.num_layers
+    seq_sharded = st.ulysses or st.fpdt_u > 1  # plain TP keeps full sequences
+    sp = st.n if seq_sharded else 1
+    tok = S / sp * d * BYTES  # one hidden tensor, local view
+    tp = st.tp if st.tp > 1 else 1
+
+    # --- checkpointed activations (saved layer inputs)
+    if st.ac:
+        saved = 0.0 if st.oc else L * tok
+    else:
+        # all intermediate tensors of every layer stay live for backward:
+        # ~2 full hidden + ~12 head/ffn-sharded tensors per layer (Table 2)
+        saved = L * tok * (2 + 12 / tp) if tp > 1 else L * tok * 14
+
+    # --- working set of one block (paper Table 2 rows; backward dominates)
+    u = max(1, st.fpdt_u)
+    chunk_tok = tok / u
+    if tp > 1 and not seq_sharded:
+        work_bwd = tok * (2 + (6 + 8 + 3) / tp)  # hidden/dhidden + sharded qkv/flash/dffn
+    else:
+        q = 3 * chunk_tok       # qkv of the current chunk
+        recv = 3 * chunk_tok    # async all-to-all receive buffers
+        flash = 8 * chunk_tok   # flash bwd inputs q,k,v,o,do,dq,dk,dv
+        if u > 1 and not st.offload:
+            kv_all = 2 * tok    # all u KV chunks resident on device
+        elif u > 1:
+            kv_all = 4 * chunk_tok  # double-buffered single KV chunk
+        else:
+            kv_all = 2 * tok
+        work_bwd = 2 * tok + q + recv + flash + kv_all
+    # MLP chunks (2u) + chunked logits (~2 hidden chunks)
+    ffn = (cfg.d_ff or cfg.d_inner) / d * chunk_tok / (2 * tp)
+    logits = 2 * tok / max(1, u)
+    peak = (work_bwd + ffn + logits) * SPIKE
+    return {"saved": saved, "peak_block": peak, "total": saved + peak}
+
+
+HOST_PER_GPU = 256 * GB  # paper: 1 TB host / 4-GPU node
+
+
+def host_bytes(cfg: ModelConfig, S: int, st: Strategy) -> float:
+    """Host-memory footprint per GPU: offloaded checkpoints + offloaded KV
+    (+ ZeRO-Offload optimizer states when used)."""
+    d, L = cfg.d_model, cfg.num_layers
+    sp = st.n if (st.ulysses or st.fpdt_u > 1) else 1
+    h = 0.0
+    if st.oc:
+        h += L * S / sp * d * BYTES  # offloaded layer inputs
+    if st.offload:
+        h += 2 * S * cfg.kv_dim * BYTES / st.n * L  # idle KV chunks, all layers
+    return h
+
+
+def train_memory_gb(cfg: ModelConfig, S: int, st: Strategy,
+                    opt_on_host: bool = False) -> float:
+    ms = model_state_bytes(cfg, st)
+    if opt_on_host:  # ZeRO-Offload: fp32 states live in host memory
+        N = cfg.num_params()
+        ms = (2 * N + 2 * N) / (st.n if st.zero >= 3 else st.tp or 1)
+    act = activation_bytes(cfg, S, st)["total"]
+    frag = 1.5 * GB  # allocator fragmentation + workspace (calibrated)
+    return (ms + act + frag) / GB
+
+
+def max_seq_len(cfg: ModelConfig, st: Strategy, budget: float = A100) -> int:
+    """Largest power-of-two sequence fitting device AND host budgets.
+    Falls back to ZeRO-Offload (optimizer states on host) when the model
+    states alone exceed the device budget (the paper's small-n cells)."""
+    opt_on_host = model_state_bytes(cfg, st) > 0.9 * budget
+    best = 0
+    for logS in range(12, 24):  # 4K .. 8M
+        S = 1 << logS
+        stu = st
+        if st.fpdt_u > 1:
+            stu = dataclasses.replace(st, fpdt_u=max(1, min(st.fpdt_u, S // 65536)))
+        dev_ok = train_memory_gb(cfg, S, stu, opt_on_host) * GB <= budget
+        host = host_bytes(cfg, S, stu)
+        if opt_on_host:
+            host += 12 * cfg.num_params() / stu.n
+        if dev_ok and host <= HOST_PER_GPU:
+            best = S
+    return best

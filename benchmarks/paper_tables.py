@@ -1,0 +1,177 @@
+"""Reproductions of every paper table/figure, one function each.
+
+All return lists of CSV rows (also printed by benchmarks.run).  Memory/MFU
+numbers come from the calibrated models (memory_model / perf_model) on the
+paper's A100-80G hardware profile; deviations from the paper's published
+numbers are reported inline — see EXPERIMENTS.md for the analysis.
+"""
+from __future__ import annotations
+
+import sys
+from typing import List
+
+from repro.configs import get_config
+
+from benchmarks import memory_model as MM
+from benchmarks import perf_model as PM
+
+K = 1024
+
+
+def _fmt_len(S: int) -> str:
+    return f"{S // (K * K)}M" if S >= K * K else f"{S // K}K"
+
+
+def _parse_len(s: str) -> int:
+    s = s.rstrip("+")
+    return int(float(s[:-1]) * (K * K if s[-1] == "M" else K))
+
+
+# ---------------------------------------------------------------- Table 1
+PAPER_TABLE1 = {
+    # (model, gpus, mem_gb): paper max len
+    ("gpt-2.7b", 1, 40): "128K", ("gpt-2.7b", 2, 40): "512K",
+    ("gpt-2.7b", 4, 40): "2M", ("gpt-2.7b", 8, 40): "4M",
+    ("gpt-2.7b", 4, 80): "4M", ("gpt-2.7b", 8, 80): "8M+",
+    ("llama-8b", 8, 40): "1M", ("llama-8b", 4, 80): "2M",
+    ("llama-8b", 8, 80): "4M", ("llama-8b", 16, 80): "8M+",
+    ("gpt-13b", 8, 40): "256K", ("gpt-13b", 4, 80): "512K",
+    ("gpt-13b", 8, 80): "3M", ("gpt-13b", 16, 80): "4M",
+    ("gpt-30b", 8, 80): "1M", ("gpt-30b", 16, 80): "3M", ("gpt-30b", 32, 80): "4M",
+    ("llama-70b", 16, 80): "1M", ("llama-70b", 32, 80): "4M",
+}
+
+
+def table1_max_context() -> List[str]:
+    rows = ["table1,model,gpus,mem_gb,ours,paper,log2_delta"]
+    for (model, n, gb), paper in sorted(PAPER_TABLE1.items()):
+        cfg = get_config(model)
+        st = MM.Strategy(n=n, ulysses=True, zero=3, ac=True, oc=True,
+                         fpdt_u=64, offload=True)
+        ours = MM.max_seq_len(cfg, st, budget=gb * MM.GB)
+        pv = _parse_len(paper)
+        import math
+
+        delta = round(math.log2(max(ours, 1) / pv), 1) if ours else float("nan")
+        rows.append(f"table1,{model},{n},{gb},{_fmt_len(ours)},{paper},{delta}")
+    return rows
+
+
+# ---------------------------------------------------------------- Fig 11
+def fig11_mfu() -> List[str]:
+    """MFU vs sequence length: Megatron-SP vs Ulysses vs FPDT(+offload)."""
+    rows = ["fig11,model,gpus,seq_len,strategy,mfu_pct,max_ok"]
+    grid = [("gpt-2.7b", 4), ("llama-8b", 8), ("gpt-13b", 8), ("gpt-30b", 16)]
+    for model, n in grid:
+        cfg = get_config(model)
+        for logS in range(17, 23):  # 128K .. 4M
+            S = 1 << logS
+            for strat in ("megatron-sp", "ulysses", "fpdt", "fpdt-offload"):
+                if strat == "megatron-sp":
+                    st = MM.Strategy(n=n, tp=n, ac=True, oc=True)
+                    fits = MM.train_memory_gb(cfg, S, st) <= 80
+                    r = PM.megatron_sp_step_time(cfg, S, n)
+                elif strat == "ulysses":
+                    st = MM.Strategy(n=n, ulysses=True, zero=3, ac=True, oc=True)
+                    fits = MM.train_memory_gb(cfg, S, st) <= 80
+                    r = PM.fpdt_step_time(cfg, S, n, 1, offload=False)
+                else:
+                    off = strat.endswith("offload")
+                    u = max(1, S // 65536)
+                    st = MM.Strategy(n=n, ulysses=True, zero=3, ac=True, oc=True,
+                                     fpdt_u=u, offload=off)
+                    fits = MM.train_memory_gb(cfg, S, st) <= 80
+                    r = PM.fpdt_step_time(cfg, S, n, u, offload=off)
+                rows.append(f"fig11,{model},{n},{_fmt_len(S)},{strat},"
+                            f"{r['mfu'] * 100:.1f},{int(fits)}")
+    return rows
+
+
+# ---------------------------------------------------------------- Fig 12
+def fig12_chunk_sweep() -> List[str]:
+    """Fixed 256K global sequence; sweep chunk size (paper: 64K sweet spot)."""
+    rows = ["fig12,model,gpus,chunk,mem_gb,mfu_pct"]
+    grid = [("gpt-2.7b", 4), ("gpt-6.7b", 4), ("gpt-13b", 4), ("gpt-30b", 8)]
+    S = 256 * K
+    for model, n in grid:
+        cfg = get_config(model)
+        for chunk in (8 * K, 16 * K, 32 * K, 64 * K, 128 * K, 256 * K):
+            u = S // chunk
+            st = MM.Strategy(n=n, ulysses=True, zero=3, ac=True, oc=True,
+                             fpdt_u=u, offload=u > 1)
+            mem = MM.train_memory_gb(cfg, S, st)
+            r = PM.fpdt_step_time(cfg, S, n, u, offload=u > 1)
+            rows.append(f"fig12,{model},{n},{_fmt_len(chunk)},{mem:.1f},{r['mfu']*100:.1f}")
+    return rows
+
+
+# ---------------------------------------------------------------- Table 3
+def table3_strategies() -> List[str]:
+    """8B Llama x 8 GPUs strategy ablation."""
+    rows = ["table3,strategy,ours_max,paper_max,ours_mem_gb,paper_mem_gb,ours_mfu,paper_mfu"]
+    cfg = get_config("llama-8b")
+    cases = [
+        ("TP", MM.Strategy(n=8, tp=8), "32K", 64.3, 9.4),
+        ("TP+AC", MM.Strategy(n=8, tp=8, ac=True), "128K", 61.2, 19.4),
+        ("TP+AC+OC", MM.Strategy(n=8, tp=8, ac=True, oc=True), "512K", 78.7, 32.7),
+        ("UL+ZeRO1", MM.Strategy(n=8, ulysses=True, zero=1), "64K", 58.9, 15.3),
+        ("UL+ZeRO2", MM.Strategy(n=8, ulysses=True, zero=2), "64K", 54.5, 15.3),
+        ("UL+ZeRO3", MM.Strategy(n=8, ulysses=True, zero=3), "64K", 52.3, 21.0),
+        ("UL+AC+OC+ZeRO3", MM.Strategy(n=8, ulysses=True, zero=3, ac=True, oc=True),
+         "512K", 60.1, 47.2),
+        ("FPDT", MM.Strategy(n=8, ulysses=True, zero=3, ac=True, oc=True,
+                             fpdt_u=64, offload=True), "4M", 68.0, 55.7),
+    ]
+    for name, st, paper_max, paper_mem, paper_mfu in cases:
+        ours = MM.max_seq_len(cfg, st)
+        mem = MM.train_memory_gb(cfg, ours, st)
+        if st.fpdt_u > 1:
+            u = max(1, ours // 65536)
+            mfu = PM.fpdt_step_time(cfg, ours, 8, u, offload=True)["mfu"] * 100
+        elif st.ulysses:
+            mfu = PM.fpdt_step_time(cfg, ours, 8, 1, offload=False)["mfu"] * 100
+        else:  # plain TP: all-reduce bound (paper's 9-30% rows)
+            mfu = PM.megatron_tp_step_time(cfg, ours, 8)["mfu"] * 100
+        rows.append(f"table3,{name},{_fmt_len(ours)},{paper_max},{mem:.1f},"
+                    f"{paper_mem},{mfu:.1f},{paper_mfu}")
+    return rows
+
+
+# ---------------------------------------------------------------- Table 4
+PAPER_TABLE4 = {
+    ("gpt-2.7b", 0.5): 41.7, ("gpt-2.7b", 0.0): 38.4,
+    ("llama-8b", 0.5): 40.6, ("llama-8b", 0.0): 47.6,
+    ("gpt-13b", 0.5): 40.7, ("gpt-13b", 0.0): 46.1,
+}
+
+
+def table4_sparse() -> List[str]:
+    """Block-sparse attention: MFU vs sparsity (256K seq, 64K chunks)."""
+    rows = ["table4,model,gpus,sparsity,mfu_pct,paper_mfu"]
+    grid = [("gpt-2.7b", 1), ("llama-8b", 4), ("gpt-13b", 4)]
+    S = 256 * K
+    for model, n in grid:
+        cfg = get_config(model)
+        for sp in (0.5, 0.4, 0.3, 0.2, 0.1, 0.0):
+            r = PM.fpdt_step_time(cfg, S, n, 4, offload=True, sparsity=sp)
+            paper = PAPER_TABLE4.get((model, sp), "")
+            rows.append(f"table4,{model},{n},{sp},{r['mfu']*100:.1f},{paper}")
+    return rows
+
+
+# ---------------------------------------------------------------- Fig 10
+def fig10_latency() -> List[str]:
+    """Unit-op latency crossover (a2a / attention fwd/bwd / fetch) on the
+    A100 profile: the chunk size where compute first covers the fetch."""
+    rows = ["fig10,seq_chunk,t_a2a_ms,t_attn_fwd_ms,t_attn_bwd_ms,t_fetch_ms"]
+    cfg = get_config("gpt-2.7b")
+    n = 4
+    for logc in range(13, 20):  # 8K .. 512K chunks
+        c = 1 << logc
+        r = PM.fpdt_step_time(cfg, c, n, 1, offload=True)
+        rows.append(
+            f"fig10,{_fmt_len(c)},{r['t_a2a_unit']*1e3:.3f},"
+            f"{r['t_att_diag']*1e3:.3f},{2*r['t_att_diag']*1e3:.3f},"
+            f"{r['t_fetch_unit']*1e3:.3f}"
+        )
+    return rows

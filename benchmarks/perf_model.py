@@ -1,0 +1,130 @@
+"""Pipeline performance model: FPDT's chunk schedule as a discrete-event
+simulation (the paper's Figs 8-10 reasoning, made executable).
+
+Per (q-chunk i, kv-chunk j<=i) pair the backward-dominant schedule overlaps
+  * attention compute on the MXU/SM          t_att(pair)
+  * host->device KV fetch on PCIe/host link  t_fetch(chunk)   [offload only]
+  * the per-chunk all-to-all on NVLink/ICI   t_a2a(chunk)
+with a double buffer: pair (i, j+1)'s fetch is issued while (i, j) computes;
+effective time per pair = max(t_att, t_fetch_next, t_a2a_amortized).  GPU
+starving (Fig 8) emerges when chunks are too small; HBM waste (Fig 9) is the
+memory model's domain (benchmarks/memory_model.py).
+
+Hardware profiles: A100-80G node (paper: NVLink 300 GB/s algo bw, PCIe gen4
+~25 GB/s effective, 312 TFLOP/s bf16) and TPU v5e (ICI ~50 GB/s/link x 2
+usable, host link ~32 GB/s, 197 TFLOP/s bf16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs import ModelConfig
+
+BYTES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak: float  # FLOP/s bf16
+    net_bw: float  # intra-group collective bandwidth per device
+    host_bw: float  # host<->device per device
+    hbm: float  # bytes
+
+
+A100 = HW("a100", 312e12, 250e9, 25e9, 80 * 1024**3)
+V5E = HW("v5e", 197e12, 100e9, 32e9, 16 * 1024**3)
+
+
+def fpdt_step_time(cfg: ModelConfig, S: int, n: int, u: int, *,
+                   offload: bool, hw: HW = A100, sparsity: float = 0.0,
+                   mfu_eff: float = 0.62, attn_eff: float = 0.75) -> Dict[str, float]:
+    """Per-layer-normalized training step time for the attention pipeline +
+    token-wise compute.  attn_eff: flash-attention kernel efficiency at long
+    sequence (FA2 on A100 ~0.7-0.75); mfu_eff: dense matmul efficiency."""
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    c = S // u  # global chunk length
+    tok_c = c / n  # per-device token share of a chunk (Ulysses)
+    eff_peak = hw.peak * mfu_eff
+    att_peak = hw.peak * attn_eff
+
+    # per-chunk unit times (seconds, per device)
+    t_a2a = 3 * tok_c * d * BYTES * (n - 1) / n / hw.net_bw
+    t_fetch = 2 * c * kvd / n * BYTES / hw.host_bw  # k+v of one chunk (head-sharded)
+    keep = 1.0 - sparsity
+
+    def t_att_pair(full: bool) -> float:
+        # q chunk (c rows, qd/n heads-dim) x kv chunk (c keys)
+        flops = 4 * c * c * qd / n * (0.5 if not full else keep)
+        return flops / att_peak
+
+    # ---- forward pipeline over pairs (i attends j<=i)
+    t_fwd = 0.0
+    for i in range(u):
+        t_fwd += t_a2a
+        for j in range(i + 1):
+            ta = t_att_pair(full=(j < i))
+            tf = t_fetch if (offload and j < i) else 0.0
+            t_fwd += max(ta, tf)
+    # ---- backward (Fig 7): 2x attention flops per pair + dq/dkv a2a
+    t_bwd = 0.0
+    for j in range(u):
+        t_bwd += t_fetch if offload else 0.0
+        for i in range(j, u):
+            ta = 2 * t_att_pair(full=(j < i))
+            tf = t_fetch if (offload and i < u - 1) else 0.0
+            t_bwd += max(ta, tf)
+        t_bwd += t_a2a  # dk/dv return
+    # ---- token-wise compute (proj, mlp, norms), fwd+bwd+remat = 4 passes
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    tok = S / n
+    flops_tok = 2 * tok * (d * (qd + 2 * kvd) + qd * d + n_mats * d * (cfg.d_ff or 4 * d))
+    t_tok = 4 * flops_tok / eff_peak
+
+    t_total = t_fwd * 2 + t_bwd + t_tok  # fwd + remat-fwd + bwd
+    # useful flops for MFU: fwd + 2x bwd, causal-corrected attention, no remat
+    useful = 3 * (flops_tok + 4 * (S * (S + 1) / 2) * qd / n)
+    return {
+        "t_step_per_layer": t_total,
+        "mfu": useful / (t_total * hw.peak),
+        "t_fwd": t_fwd, "t_bwd": t_bwd, "t_tok": t_tok,
+        "t_a2a_unit": t_a2a, "t_fetch_unit": t_fetch,
+        "t_att_diag": t_att_pair(False), "t_att_full": t_att_pair(True),
+    }
+
+
+def megatron_sp_step_time(cfg: ModelConfig, S: int, n: int, *, hw: HW = A100,
+                          mfu_eff: float = 0.62) -> Dict[str, float]:
+    """Megatron-SP: TP attention + sequence-parallel norm regions.
+    Communication: 4 all-gathers + 4 reduce-scatters of the FULL sequence
+    hidden per layer (fwd+bwd), volume independent of n (the paper's point:
+    it scales with S, not S/n)."""
+    d, qd = cfg.d_model, cfg.q_dim
+    eff_peak = hw.peak * mfu_eff
+    t_comm = 8 * S * d * BYTES * (n - 1) / n / hw.net_bw * 3 / 2
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    flops = (2 * S * (d * (qd + 2 * cfg.kv_dim) + qd * d + n_mats * d * (cfg.d_ff or 4 * d))
+             + 4 * (S * (S + 1) / 2) * qd) / n
+    t_comp = 4 * flops / eff_peak
+    useful = 3 * flops
+    return {"t_step_per_layer": t_comp + t_comm,
+            "mfu": useful / ((t_comp + t_comm) * hw.peak)}
+
+
+def megatron_tp_step_time(cfg: ModelConfig, S: int, n: int, *, hw: HW = A100,
+                          mfu_eff: float = 0.62) -> Dict[str, float]:
+    """Plain tensor parallel (paper Table 3 "TP." rows): two all-reduces of
+    the full [S, d] hidden per layer per direction -> comm volume
+    ~8 x S x d x 2(n-1)/n bytes per layer per pass, sequence NOT sharded."""
+    d, qd = cfg.d_model, cfg.q_dim
+    eff_peak = hw.peak * mfu_eff
+    ar = 2 * S * d * BYTES * 2 * (n - 1) / n / hw.net_bw  # one all-reduce
+    t_comm = ar * 2 * 3  # 2 per layer x (fwd + bwd + remat-fwd)
+    n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+    flops = (2 * S * (d * (qd + 2 * cfg.kv_dim) + qd * d + n_mats * d * (cfg.d_ff or 4 * d))
+             + 4 * (S * (S + 1) / 2) * qd) / n
+    t_comp = 4 * flops / eff_peak
+    useful = 3 * flops
+    return {"t_step_per_layer": t_comp + t_comm,
+            "mfu": useful / ((t_comp + t_comm) * hw.peak)}

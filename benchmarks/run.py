@@ -1,0 +1,51 @@
+"""Benchmark runner: one function per paper table/figure + kernel micro-bench.
+
+  PYTHONPATH=src python -m benchmarks.run           # all, CSV to stdout
+  PYTHONPATH=src python -m benchmarks.run --only table1 fig11
+
+Roofline sweeps (compile-heavy) run separately:
+  python -m repro.launch.dryrun --all     -> experiments/dryrun/
+  python -m benchmarks.roofline --all     -> experiments/roofline/
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench
+    from benchmarks import paper_tables as PT
+
+    suites = {
+        "table1": PT.table1_max_context,
+        "fig10": PT.fig10_latency,
+        "fig11": PT.fig11_mfu,
+        "fig12": PT.fig12_chunk_sweep,
+        "table3": PT.table3_strategies,
+        "table4": PT.table4_sparse,
+        "kernels": kernels_bench.run,
+    }
+    sel = args.only or list(suites)
+    failures = 0
+    for name in sel:
+        try:
+            for row in suites[name]():
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

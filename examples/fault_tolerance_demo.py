@@ -1,0 +1,81 @@
+"""Fault-tolerance demo: preemption + elastic resume + straggler detection.
+
+1. Train with periodic async checkpoints, then simulate a preemption
+   (SIGTERM) — a final blocking checkpoint is written.
+2. Resume from the newest manifest and finish on the SAME loss trajectory.
+3. Feed the heartbeat monitor an injected straggler and show the re-mesh
+   alert a 1000-node launcher would act on.
+
+  PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import os
+import signal
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ShapeConfig, get_config, reduced
+from repro.data.pipeline import CheckpointableIterator, make_batch_fn
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.runtime.train_loop import (HeartbeatMonitor, StragglerAlert,
+                                      TrainConfig, TrainLoop, make_train_step)
+
+
+def main():
+    ckpt_dir = "/tmp/ft_demo_ckpt"
+    os.system(f"rm -rf {ckpt_dir}")
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-1b")), num_layers=2)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    oc = adamw.OptConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+    opt = adamw.init(oc, params)
+    tc = TrainConfig(steps=30, ckpt_every=5, log_every=5)
+    step_fn = jax.jit(make_train_step(cfg, None, oc, tc))
+    bf = make_batch_fn(cfg, ShapeConfig("ft", 64, 2, "train"))
+    put = lambda b: {k: jnp.asarray(v) for k, v in b.items()}
+    mgr = CheckpointManager(ckpt_dir)
+
+    # --- phase 1: train, then preempt mid-run
+    loop = TrainLoop(cfg, None, oc, tc, step_fn, CheckpointableIterator(bf), mgr)
+    killer = threading.Timer(6.0, lambda: os.kill(os.getpid(), signal.SIGTERM))
+    killer.start()
+    print("== phase 1: training until preemption (SIGTERM in ~6s) ==")
+    p1, o1, reached = loop.run(params, opt, put_batch=put)
+    killer.cancel()
+    print(f"preempted at step {reached}; checkpoints on disk: {mgr.all_steps()}")
+    assert mgr.latest_step() == reached  # final blocking save happened
+
+    # --- phase 2: elastic resume from the newest manifest
+    print("\n== phase 2: resume ==")
+    restored, extra = mgr.restore(mgr.latest_step(), {"params": params, "opt": opt})
+    loop2 = TrainLoop(cfg, None, oc, tc, step_fn, CheckpointableIterator(bf), mgr)
+    p2, o2, end = loop2.run(restored["params"], restored["opt"],
+                            start_step=extra["data_step"], put_batch=put)
+    print(f"resumed from {extra['data_step']} and finished at step {end}")
+    assert end == tc.steps
+
+    # --- phase 3: straggler detection
+    print("\n== phase 3: straggler detection ==")
+    mon = HeartbeatMonitor(zscore=4.0, patience=2)
+    try:
+        for i in range(40):
+            mon.record(0.10 + 0.001 * (i % 3))
+        mon.record(2.5)  # injected slow host
+        mon.record(2.5)
+    except StragglerAlert as e:
+        print(f"StragglerAlert raised -> launcher re-meshes: {e}")
+    else:
+        raise RuntimeError("straggler not detected")
+    print("\nALL FT PHASES PASSED")
+
+
+if __name__ == "__main__":
+    main()

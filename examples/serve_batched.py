@@ -1,0 +1,64 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+with a jitted incremental step — including FPDT-style host-streamed KV.
+
+  PYTHONPATH=src python examples/serve_batched.py --batch 4 --gen 16
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.parallel import ParallelContext
+from repro.models import serve as SV
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--host-kv-chunks", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(reduced(get_config(args.arch)), remat="none")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    max_len = args.prompt_len + args.gen
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+
+    t0 = time.perf_counter()
+    logits, cache = SV.prefill_step(cfg, None, params, {"tokens": prompts}, max_len=max_len)
+    jax.block_until_ready(logits)
+    print(f"prefill: {args.batch} x {args.prompt_len} tokens in "
+          f"{(time.perf_counter()-t0)*1e3:.0f} ms")
+
+    par = ParallelContext(mesh=None)
+    decode = jax.jit(lambda c, t, p: SV.decode_step(
+        cfg, par, params, c, {"tokens": t}, p, n_host_chunks=args.host_kv_chunks))
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, cache = decode(cache, out[-1], jnp.int32(args.prompt_len + i))
+        out.append(jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32))
+    jax.block_until_ready(out[-1])
+    dt = time.perf_counter() - t0
+    print(f"decode (host-streamed KV, {args.host_kv_chunks} chunks): "
+          f"{args.gen-1} steps in {dt*1e3:.0f} ms ({dt/(args.gen-1)*1e3:.1f} ms/step)")
+    seqs = jnp.concatenate(out, axis=1)
+    for i in range(args.batch):
+        print(f"  seq{i}: {seqs[i, :10].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""llama4-maverick-400b-a17b [moe] — MoE, early fusion (hf:meta-llama/Llama-4).
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192/expert vocab=202048, MoE 128e top-1.
+40 heads % 16 != 0 -> all-gather context parallelism (FPDT-CP).
+Optimizer state kept in bf16 so per-chip state fits v5e HBM at 512 chips
+(see DESIGN.md §4 — the assigned 48Lx128e config totals ~780B params).
+"""
+from repro.configs import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202048,
+        num_experts=128,
+        experts_per_token=1,
+        mlp_act="swiglu",
+        norm="rmsnorm",
+        rope_theta=500000.0,
+        attn_impl="cp",
+        opt_state_dtype="bfloat16",
+    )

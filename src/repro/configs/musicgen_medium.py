@@ -1,0 +1,26 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens (arXiv:2306.05284).
+
+48L d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048.
+Modality frontend is a STUB: input_specs() provides precomputed frame
+embeddings (b, s, d_model); the transformer backbone is what we build.
+24 heads % 16 != 0 -> all-gather context parallelism (FPDT-CP).
+"""
+from repro.configs import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        num_layers=48,
+        d_model=1536,
+        num_heads=24,
+        num_kv_heads=24,
+        head_dim=64,
+        d_ff=6144,
+        vocab_size=2048,
+        mlp_act="gelu",
+        norm="layernorm",
+        frontend="audio_frames",
+        attn_impl="cp",
+    )

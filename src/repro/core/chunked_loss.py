@@ -1,0 +1,94 @@
+"""Vocab-projection + cross-entropy, chunked along the sequence (paper §5.4).
+
+The last linear projection to vocab logits (fp32) is the paper's final
+memory spike: [b, s, V] fp32 with V >> d.  Chunking the sequence into
+~ceil(V/d)*2 chunks bounds the live logits buffer to ~2x the hidden chunk.
+Backward recomputes per chunk (jax.checkpoint inside the scan), so the
+spike never materializes in either pass.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+
+IGNORE = -100
+
+
+def auto_chunks(cfg: ModelConfig, seq_len: int, sp: int = 1) -> int:
+    """Paper's rule vocab/hidden*2, rounded down so seq_len % n == 0 AND each
+    chunk's sequence stays divisible by the model axis (so logits chunks can
+    remain sequence-sharded — no hidden-state gather per chunk)."""
+    target = max(1, (2 * cfg.vocab_size) // cfg.d_model)
+    best = 1
+    for n in range(1, min(target, seq_len) + 1):
+        if seq_len % n == 0 and (seq_len // n) % max(1, sp) == 0:
+            best = n
+    return best
+
+
+def softmax_xent_chunked(
+    x: jnp.ndarray,  # [b, s, d] final hidden (normed)
+    head: jnp.ndarray,  # [d, V]
+    labels: jnp.ndarray,  # [b, s] int32, IGNORE masked
+    n_chunks: int,
+    z_weight: float = 0.0,
+    par=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (sum_loss fp32 scalar, token_count fp32 scalar).
+
+    Distributed: chunks are taken along the BATCH (each chunk = one
+    per-dp-shard batch row group); the hidden chunk all-gathers its sequence
+    (small) while logits stay V-sharded over the model axis, so the head is
+    never replicated and its gradient never all-reduced (§Perf B1: the
+    seq-chunked variant re-gathered hidden per chunk and all-reduced a
+    replicated head grad — measured, refuted)."""
+    b, s, d = x.shape
+    dp = par.dp if par is not None and par.mesh is not None else 1
+    if par is not None and par.mesh is not None:
+        # tables are stored (vocab->data, d->model) for cheap lookups; the
+        # loss wants V-sharded logits, so reshard the head ONCE (d full,
+        # V->model).  Without this GSPMD contracts over the sharded d and
+        # psums full fp32 logits (measured +670 ms/step, §Perf B2).
+        head = par.constrain(head, None, par.sp_axis)
+    batch_mode = dp > 1 and b % dp == 0 and (b // dp) >= 1
+    if batch_mode:
+        n_chunks = min(b // dp if b // dp > 1 else 1, max(1, n_chunks))
+        n_chunks = next(n for n in range(n_chunks, 0, -1) if (b // dp) % n == 0 or n == 1)
+        if (b // dp) % n_chunks:
+            n_chunks = 1
+        cb = b // n_chunks
+        xs = x.reshape(n_chunks, cb, s, d)
+        ys = labels.reshape(n_chunks, cb, s)
+    else:
+        if s % n_chunks != 0:
+            n_chunks = 1
+        cs = s // n_chunks
+        xs = x.reshape(b, n_chunks, cs, d).transpose(1, 0, 2, 3)
+        ys = labels.reshape(b, n_chunks, cs).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        xc, yc = inp
+        if par is not None and par.mesh is not None and batch_mode:
+            xc = par.constrain(xc, par.dp_axes, None, None)  # gather seq, keep batch
+        logits = (xc @ head).astype(jnp.float32)  # [.., .., V]
+        if par is not None and par.mesh is not None:
+            if batch_mode:  # vocab-parallel logits, batch over dp
+                logits = par.constrain(logits, par.dp_axes, None, par.sp_axis)
+            else:
+                logits = par.constrain(logits, par.dp_axes, par.sp_axis, None)
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        ok = yc != IGNORE
+        tgt = jnp.take_along_axis(logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        nll = jnp.where(ok, lz - tgt, 0.0)
+        if z_weight:
+            nll = nll + jnp.where(ok, z_weight * lz**2, 0.0)
+        loss_sum, count = carry
+        return (loss_sum + nll.sum(), count + ok.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ys))
+    return loss_sum, count

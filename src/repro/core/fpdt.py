@@ -1,0 +1,303 @@
+"""FPDT: the paper's sequence-chunk pipelined distributed attention.
+
+One implementation covers both the paper's baseline and its contribution:
+
+  * ``u = 1``     -> plain DeepSpeed-Ulysses attention (project, all-to-all,
+                     flash attention, all-to-all back).  This *is* the
+                     paper's baseline, and the u>1 path must match it
+                     bit-for-bit in expectation (tested).
+  * ``u > 1``     -> the FPDT pipeline: the hidden chunk T_i is projected to
+                     (q_i, k_i, v_i), per-chunk all-to-all scatters heads and
+                     gathers sequence (GSPMD reshard induced by a sharding
+                     constraint), online attention continues one softmax
+                     across KV chunks j <= i, and idle KV chunks are
+                     offloaded to pinned_host memory and fetched back
+                     chunk-by-chunk (double buffering is structural: the
+                     fetch of chunk j+1 carries no data dependence on the
+                     compute of chunk j, so XLA's async copy-start/copy-done
+                     overlaps them).
+
+Backward is a custom VJP implementing the paper's Fig. 7 nested loop:
+outer loop over KV chunks j, inner loop over query chunks i >= j, using the
+saved final row-LSE L_i so every (i, j) pair's contribution is independent:
+dk_j/dv_j accumulate across the inner loop; dq_i accumulates across outer
+iterations and finalizes when j == i, at which point it is all-to-all'd back
+(a sharding constraint) and back-projected — overlapping with the next KV
+chunk's fetch, exactly the paper's schedule.
+
+Two distribution modes (DESIGN.md §3):
+  * kind="ulysses" — heads % sp == 0 (GQA KV replicated to the SP degree);
+  * kind="cp"      — all-gather context parallelism for archs whose head
+                     count doesn't divide the model axis; with u > 1 this
+                     becomes chunk-streamed KV all-gather + offload
+                     ("FPDT-CP", a beyond-paper generalization);
+  * kind="local"   — single-device / no model axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.core.online_softmax import SoftmaxState, finalize, lse
+from repro.core.parallel import ParallelContext
+from repro.kernels.flash_attention import ops as fa
+from repro.models.layers import apply_rope, qkv_proj
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers (kind-dependent): placement of the per-chunk q/k/v
+# ---------------------------------------------------------------------------
+
+
+def _shard_q(par: ParallelContext, kind: str, q: jnp.ndarray) -> jnp.ndarray:
+    """q [b, s, h, d] placement inside attention."""
+    if par.mesh is None or kind == "local":
+        return q
+    if kind == "ulysses":
+        return par.head_sharded(q)  # seq gathered, heads scattered (a2a)
+    return par.constrain(q, par.dp_axes, par.sp_axis, None, None)  # cp: seq stays
+
+
+def _shard_kv(par: ParallelContext, kind: str, x: jnp.ndarray) -> jnp.ndarray:
+    if par.mesh is None or kind == "local":
+        return x
+    if kind == "ulysses" and x.shape[2] % par.sp == 0:
+        return par.head_sharded(x)
+    # GQA/MQA with kv_heads < sp: keep KV replicated across the model axis
+    # (a clean all-gather; never materialize a repeat + reshard, which GSPMD
+    # can only realize by full rematerialization)
+    return par.replicated_kv(x)
+
+
+def _kv_rep(cfg: ModelConfig, par: ParallelContext, kind: str) -> int:
+    """KV head replication for Ulysses.  Disabled (returns 1) since v2 of the
+    sharding scheme: kv_heads < sp now keeps KV replicated over the model
+    axis instead of repeating heads (see _shard_kv) — GSPMD turned the
+    repeat+reshard into a full rematerialization (measured §Perf A1)."""
+    return 1
+
+
+def _host_spec_kv(par: ParallelContext, kind: str, n_heads: int, chunk_len: int):
+    """Sharding spec of offloaded head-layout [b, h, s, d] chunks: heads over
+    model when divisible, else the chunk's sequence dim, else dp only."""
+    if kind == "ulysses" and par.sp and n_heads % par.sp == 0:
+        return (par.dp_axes, par.sp_axis, None, None)
+    if par.sp and chunk_len % par.sp == 0:
+        return (par.dp_axes, None, par.sp_axis, None)
+    return (par.dp_axes, None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# the chunk pipeline (forward + Fig.7 backward), cached per static config
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
+               u: int, offload: bool, seq_len: int, pos_offset: int):
+    sparsity = cfg.attn_sparsity
+    """Returns f(x, p) -> o  with x [b, S, d], o [b, S, hq*dh] (seq-sharded)."""
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rep = _kv_rep(cfg, par, kind)
+    impl = par.attn_impl
+    bq, bk = cfg.block_q, cfg.block_k
+    assert seq_len % u == 0, (seq_len, u)
+    cq = seq_len // u
+    do_offload = offload and par.offload_to_host and u > 1
+    kv_spec = _host_spec_kv(par, kind, hkv * rep, seq_len // u)
+    q_spec = _host_spec_kv(par, kind, hq, seq_len // u)
+
+    def project(p, xi, i):
+        b = xi.shape[0]
+        q, k, v = qkv_proj(cfg, p, xi)  # [b, cq, h, dh]
+        pos = jnp.arange(i * cq + pos_offset, i * cq + cq + pos_offset)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        q = _shard_q(par, kind, q)
+        k = _shard_kv(par, kind, k)
+        v = _shard_kv(par, kind, v)
+        # head-major layout for the kernels
+        return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    def unrope_back(g, i):
+        """Backward of rope: rotate by -theta (orthogonal map)."""
+        pos = -jnp.arange(i * cq + pos_offset, i * cq + cq + pos_offset)
+        return apply_rope(g, pos, cfg.rope_theta)
+
+    def pair_live(i, j):
+        if j > i:
+            return False
+        if window and (i - j) * cq >= window + cq - 1:
+            return False  # chunk pair fully outside the attention band
+        if sparsity > 0.0 and j < i:
+            # block-sparse (paper §5.6): keep ~(1-sparsity) of off-diagonal
+            # KV chunks by distance stride; the diagonal is always attended.
+            # Fewer KV chunks are fetched from host — the paper's Table 4.
+            stride = max(1, round(1.0 / max(1e-9, 1.0 - sparsity)))
+            if (i - j - 1) % stride != 0:
+                return False
+        return True
+
+    def to_host(t, spec=None):
+        return par.to_host(t, *(spec or kv_spec)) if do_offload else t
+
+    def to_dev(t, spec=None):
+        return par.to_device(t, *(spec or kv_spec)) if do_offload else t
+
+    # ---------------- forward ----------------
+    def fwd(x, p):
+        b = x.shape[0]
+        kv_store = []  # (k_j, v_j) in head layout, offloaded when idle
+        outs, Ls, res_q, res_o = [], [], [], []
+        for i in range(u):
+            xi = jax.lax.slice_in_dim(x, i * cq, (i + 1) * cq, axis=1)
+            qi, ki, vi = project(p, xi, i)
+            carry = None
+            for j in range(i):
+                if not pair_live(i, j):
+                    continue
+                kj, vj = kv_store[j]
+                kj, vj = to_dev(kj), to_dev(vj)  # fetch (prefetch overlaps)
+                carry = fa.chunk_fwd(
+                    qi, kj, vj, carry, causal=True, window=window,
+                    q_offset=i * cq, k_offset=j * cq, block_q=bq, block_k=bk,
+                    impl=impl,
+                )
+            carry = fa.chunk_fwd(
+                qi, ki, vi, carry, causal=True, window=window,
+                q_offset=i * cq, k_offset=i * cq, block_q=bq, block_k=bk,
+                impl=impl,
+            )
+            st = SoftmaxState(*carry)
+            oi = finalize(st)  # [b, h, cq, dh] fp32
+            Li = lse(st)
+            kv_store.append((to_host(ki), to_host(vi)))
+            res_q.append(to_host(qi, q_spec))
+            res_o.append(oi)
+            Ls.append(Li)
+            # back to token layout + seq sharding (inverse all-to-all)
+            ot = oi.astype(x.dtype).transpose(0, 2, 1, 3)  # [b, cq, hq, dh]
+            if par.mesh is not None and kind != "local":
+                ot = par.constrain(ot, par.dp_axes, par.sp_axis, None, None)
+            outs.append(ot.reshape(b, cq, hq * dh))
+        o = jnp.concatenate(outs, axis=1)
+        if par.mesh is not None:
+            o = par.seq_sharded(o)
+        return o, (x, p, kv_store, res_q, res_o, Ls)
+
+    # ---------------- backward: Fig. 7 nested loop ----------------
+    def bwd(res, do):
+        x, p, kv_store, res_q, res_o, Ls = res
+        b = x.shape[0]
+        # head-layout do + delta per chunk
+        dos, deltas = [], []
+        for i in range(u):
+            doi = jax.lax.slice_in_dim(do, i * cq, (i + 1) * cq, axis=1)
+            doi = doi.reshape(b, cq, hq, dh)
+            doi = _shard_q(par, kind, doi).transpose(0, 2, 1, 3).astype(jnp.float32)
+            dos.append(doi)
+            deltas.append(jnp.sum(doi * res_o[i], axis=-1))  # [b, h, cq]
+
+        dqs: list = [None] * u
+        dks: list = [None] * u
+        dvs: list = [None] * u
+        for j in range(u):
+            kj, vj = kv_store[j]
+            kj, vj = to_dev(kj), to_dev(vj)
+            for i in range(j, u):
+                if not pair_live(i, j):
+                    continue
+                qi = to_dev(res_q[i], q_spec)
+                kwargs = dict(causal=True, window=window, q_offset=i * cq,
+                              k_offset=j * cq, block_q=bq, block_k=bk, impl=impl)
+                dk_c, dv_c = fa.chunk_bwd_dkv(qi, kj, vj, dos[i], Ls[i], deltas[i], **kwargs)
+                dq_c = fa.chunk_bwd_dq(qi, kj, vj, dos[i], Ls[i], deltas[i], **kwargs)
+                dks[j] = dk_c if dks[j] is None else dks[j] + dk_c
+                dvs[j] = dv_c if dvs[j] is None else dvs[j] + dv_c
+                dqs[i] = dq_c if dqs[i] is None else dqs[i] + dq_c
+
+        # per-chunk: a2a back, un-rope, un-project; accumulate dW
+        dx_chunks = []
+        dwq = dwk = dwv = None
+        dbq = dbk = dbv = None
+        for i in range(u):
+            xi = jax.lax.slice_in_dim(x, i * cq, (i + 1) * cq, axis=1)
+            dq = dqs[i].astype(x.dtype).transpose(0, 2, 1, 3)  # [b, cq, h, dh]
+            zkv = jnp.zeros((b, hkv * rep, cq, dh), x.dtype)
+            dk = (dks[i] if dks[i] is not None else zkv).astype(x.dtype).transpose(0, 2, 1, 3)
+            dv = (dvs[i] if dvs[i] is not None else zkv).astype(x.dtype).transpose(0, 2, 1, 3)
+            if par.mesh is not None and kind != "local":
+                dq = par.constrain(dq, par.dp_axes, par.sp_axis, None, None)
+                dk = par.constrain(dk, par.dp_axes, par.sp_axis, None, None)
+                dv = par.constrain(dv, par.dp_axes, par.sp_axis, None, None)
+            if rep > 1:  # sum grads of replicated KV heads
+                dk = dk.reshape(b, cq, hkv, rep, dh).sum(3)
+                dv = dv.reshape(b, cq, hkv, rep, dh).sum(3)
+            dq = unrope_back(dq, i)
+            dk = unrope_back(dk, i)
+            dqf = dq.reshape(b, cq, hq * dh)
+            dkf = dk.reshape(b, cq, hkv * dh)
+            dvf = dv.reshape(b, cq, hkv * dh)
+            dx = dqf @ p["wq"].T + dkf @ p["wk"].T + dvf @ p["wv"].T
+            dx_chunks.append(dx)
+            wq_c = jnp.einsum("bsd,bse->de", xi, dqf)
+            wk_c = jnp.einsum("bsd,bse->de", xi, dkf)
+            wv_c = jnp.einsum("bsd,bse->de", xi, dvf)
+            dwq = wq_c if dwq is None else dwq + wq_c
+            dwk = wk_c if dwk is None else dwk + wk_c
+            dwv = wv_c if dwv is None else dwv + wv_c
+            if cfg.qkv_bias:
+                bq_c = jnp.sum(dqf, axis=(0, 1))
+                bk_c = jnp.sum(dkf, axis=(0, 1))
+                bv_c = jnp.sum(dvf, axis=(0, 1))
+                dbq = bq_c if dbq is None else dbq + bq_c
+                dbk = bk_c if dbk is None else dbk + bk_c
+                dbv = bv_c if dbv is None else dbv + bv_c
+
+        dx = jnp.concatenate(dx_chunks, axis=1)
+        if par.mesh is not None:
+            dx = par.seq_sharded(dx)
+        dp = {"wq": dwq, "wk": dwk, "wv": dwv}
+        if cfg.qkv_bias:
+            dp.update({"bq": dbq, "bk": dbk, "bv": dbv})
+        # wo is not part of this custom_vjp (out_proj applied by caller)
+        return dx, dp
+
+    @jax.custom_vjp
+    def f(x, p):
+        return fwd(x, p)[0]
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fpdt_attention(
+    cfg: ModelConfig,
+    par: Optional[ParallelContext],
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    kind: str = "ulysses",
+    window: int = 0,
+    pos_offset: int = 0,
+) -> jnp.ndarray:
+    """Chunk-pipelined distributed attention over hidden states.
+
+    x: [b, S, d] (seq-sharded).  Returns [b, S, hq*dh] (seq-sharded),
+    ready for the output projection.  u = cfg.fpdt_chunks (1 = Ulysses/CP
+    baseline); offload per cfg.fpdt_offload.
+    """
+    par = par if par is not None else ParallelContext(mesh=None)
+    attn_p = {k_: p[k_] for k_ in ("wq", "wk", "wv", "bq", "bk", "bv") if k_ in p}
+    f = _make_fpdt(cfg, par, kind, window, cfg.fpdt_chunks, cfg.fpdt_offload,
+                   x.shape[1], pos_offset)
+    return f(x, attn_p)

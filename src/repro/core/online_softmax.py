@@ -1,0 +1,61 @@
+"""Online-softmax running statistics and their merge operator.
+
+The FPDT chunk pipeline continues a *single* softmax across sequence chunks:
+each chunk's attention produces an unnormalized accumulator ``acc`` together
+with running row-max ``m`` and row-sum ``l``.  ``merge`` combines two such
+partial states; it is associative and commutative (tested by hypothesis), so
+any chunk schedule (forward pipeline, nested backward loop, tree reduction)
+yields identical results.
+
+State convention (all fp32):
+  m:   [..., sq]      running row max of logits
+  l:   [..., sq]      running sum of exp(logits - m)
+  acc: [..., sq, d]   running sum of exp(logits - m) @ V  (unnormalized)
+
+``finalize(acc, l) = acc / l`` is the attention output.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # avoid actual -inf: exp(-inf - -inf) = nan
+
+
+class SoftmaxState(NamedTuple):
+    acc: jnp.ndarray  # [..., sq, d] fp32
+    m: jnp.ndarray  # [..., sq] fp32
+    l: jnp.ndarray  # [..., sq] fp32
+
+
+def zero_state(shape_sq_d, dtype=jnp.float32) -> SoftmaxState:
+    """Identity element of ``merge``: m=-inf, l=0, acc=0."""
+    *lead, sq, d = shape_sq_d
+    return SoftmaxState(
+        acc=jnp.zeros((*lead, sq, d), dtype),
+        m=jnp.full((*lead, sq), NEG_INF, dtype),
+        l=jnp.zeros((*lead, sq), dtype),
+    )
+
+
+def merge(a: SoftmaxState, b: SoftmaxState) -> SoftmaxState:
+    """Associative merge of two partial online-softmax states."""
+    m = jnp.maximum(a.m, b.m)
+    ea = jnp.exp(a.m - m)
+    eb = jnp.exp(b.m - m)
+    l = a.l * ea + b.l * eb
+    acc = a.acc * ea[..., None] + b.acc * eb[..., None]
+    return SoftmaxState(acc=acc, m=m, l=l)
+
+
+def finalize(state: SoftmaxState, eps: float = 0.0) -> jnp.ndarray:
+    """Normalized attention output. Rows with l == 0 (fully masked) -> 0."""
+    l = state.l
+    safe = jnp.where(l == 0.0, 1.0, l)
+    return state.acc / (safe[..., None] + eps)
+
+
+def lse(state: SoftmaxState) -> jnp.ndarray:
+    """Row log-sum-exp (the quantity flash backward needs)."""
+    return state.m + jnp.log(jnp.where(state.l == 0.0, 1.0, state.l))

@@ -1,0 +1,115 @@
+"""Parallel context: mesh, named-axis policy, and sharding-constraint helpers.
+
+The framework expresses distribution in the pjit/GSPMD world: model code is
+written over *global* arrays and placement is steered with sharding
+constraints.  The Ulysses all-to-all (sequence<->head resharding), the CP KV
+all-gather, and the EP dispatch all *emerge* from these constraints — the
+dry-run HLO is parsed to verify the intended collectives were chosen
+(EXPERIMENTS.md §Dry-run), and hillclimbing may override GSPMD choices with
+explicit shard_map collectives where profitable.
+
+Axis convention (per assignment):
+  pod   — outermost data parallelism across pods (multi-pod mesh only)
+  data  — data parallelism + ZeRO-3/FSDP parameter & optimizer sharding
+  model — the sequence-parallel group (Ulysses heads / CP / SSM channels / EP)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)  # ("pod", "data") on the multi-pod mesh
+    sp_axis: Optional[str] = "model"
+    attn_impl: str = "pallas"  # chunk-op kernel impl: pallas | xla_flash | ref
+    offload_to_host: bool = True  # honor fpdt_offload / remat-offload configs
+
+    # ------------------------------------------------------------------
+    @property
+    def sp(self) -> int:
+        if self.mesh is None or self.sp_axis is None:
+            return 1
+        return self.mesh.shape[self.sp_axis]
+
+    @property
+    def dp(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def ns(self, *spec, memory_kind: Optional[str] = None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        kw = {"memory_kind": memory_kind} if memory_kind else {}
+        return NamedSharding(self.mesh, P(*spec), **kw)
+
+    def constrain(self, x: jnp.ndarray, *spec) -> jnp.ndarray:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.ns(*spec))
+
+    # --- canonical activation specs ----------------------------------
+    def batch_spec(self):
+        """Leading (batch) axis spec component."""
+        return self.dp_axes if self.mesh is not None else None
+
+    def seq_sharded(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[b, s, ...]: batch over dp, sequence over model."""
+        rest = (None,) * (x.ndim - 2)
+        return self.constrain(x, self.dp_axes, self.sp_axis, *rest)
+
+    def head_sharded(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[b, s, h, d]: batch over dp, heads over model (Ulysses inside-attn)."""
+        return self.constrain(x, self.dp_axes, None, self.sp_axis, None)
+
+    def channel_sharded(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[b, s, c]: channels over model (Ulysses-for-SSM inside-mixer)."""
+        return self.constrain(x, self.dp_axes, None, self.sp_axis)
+
+    def replicated_kv(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[b, s, h, d] KV replicated across model (CP all-gather)."""
+        return self.constrain(x, self.dp_axes, None, None, None)
+
+    # --- host offload --------------------------------------------------
+    def to_host(self, x: jnp.ndarray, *spec) -> jnp.ndarray:
+        if not self.offload_to_host:
+            return x
+        if self.mesh is None:
+            s = jax.sharding.SingleDeviceSharding(jax.devices()[0], memory_kind="pinned_host")
+            return jax.device_put(x, s)
+        return jax.device_put(x, self.ns(*spec, memory_kind="pinned_host"))
+
+    def to_device(self, x: jnp.ndarray, *spec) -> jnp.ndarray:
+        if not self.offload_to_host:
+            return x
+        if self.mesh is None:
+            s = jax.sharding.SingleDeviceSharding(jax.devices()[0], memory_kind="device")
+            return jax.device_put(x, s)
+        return jax.device_put(x, self.ns(*spec, memory_kind="device"))
+
+
+def make_shard_fn(par: Optional[ParallelContext]):
+    """Hint-based constraint fn handed to family mixers (mamba/rglru/moe)."""
+    if par is None or par.mesh is None:
+        return None
+
+    def shard(x, hint: str):
+        if hint in ("seq", "seq3"):
+            return par.seq_sharded(x)
+        if hint == "channel":
+            return par.channel_sharded(x)
+        if hint == "expert":  # [e, g, c, d]
+            return par.constrain(x, par.sp_axis, par.dp_axes, None, None)
+        raise ValueError(hint)
+
+    return shard

@@ -1,0 +1,380 @@
+"""Pallas TPU flash-attention kernels with FPDT chunk-carry support.
+
+Design (TPU-native, see DESIGN.md §2):
+  * Layout [b, h, s, d]; grid (b, h, num_q_blocks, num_k_blocks) with the
+    k-block dimension innermost and sequential ("arbitrary"), carrying the
+    online-softmax state (m, l, acc) in fp32 VMEM scratch.
+  * BlockSpec tiles: q (block_q, d), k/v (block_k, d) — d is the MXU lane
+    dim (64/128/256 in our archs); block_q/block_k default 512 so a tile set
+    (q + k + v + acc + p) stays well under VMEM (~4 MB at d=128, bf16 in /
+    fp32 accum).
+  * Carry-in (acc, m, l) inputs let the FPDT sequence-chunk pipeline continue
+    one softmax across chunk boundaries; outputs are the *unnormalized*
+    running state, normalized once per chunk row at the JAX level.
+  * Causal masking against *global* positions: q_offset/k_offset are static
+    per chunk-pair call (the FPDT chunk loop is unrolled), so fully-masked
+    (dead) blocks are skipped with @pl.when.
+  * GQA is native: k/v index maps fold the q-head -> kv-head group mapping;
+    the dkv backward kernel accumulates over the q heads of each group in its
+    sequential inner grid dimension.
+
+On non-TPU backends the kernels run with interpret=True (pure-Python
+execution) — used by every test in this repo; real-TPU compilation is the
+deployment target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+
+def _fit_block(n: int, block: int) -> int:
+    """Largest divisor of n that is <= block (kernel grids need divisibility)."""
+    b = min(block, n)
+    while n % b:
+        b -= 1
+    return b
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ===========================================================================
+# Forward
+# ===========================================================================
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, acc_in_ref, m_in_ref, l_in_ref,
+    acc_out_ref, m_out_ref, l_out_ref,
+    m_scr, l_scr, acc_scr,
+    *, sm_scale, causal, window, q_offset, k_offset, block_q, block_k, nk,
+):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = m_in_ref[...].astype(jnp.float32)
+        l_scr[...] = l_in_ref[...].astype(jnp.float32)
+        acc_scr[...] = acc_in_ref[...].astype(jnp.float32)
+
+    q_start = q_offset + iq * block_q
+    k_start = k_offset + ik * block_k
+    # dead block: fully above the diagonal, or fully left of the window band
+    dead = causal & (q_start + block_q - 1 < k_start)
+    if window:
+        dead = dead | (k_start + block_k - 1 < q_start - window + 1)
+
+    @pl.when(~dead)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [block_q, block_k]
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            ok = qpos >= kpos
+            if window:
+                ok = ok & (qpos - kpos < window)
+            s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # explicit mask (don't rely on exp underflow of NEG_INF - NEG_INF)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc_new
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        acc_out_ref[...] = acc_scr[...]
+        m_out_ref[...] = m_scr[...]
+        l_out_ref[...] = l_scr[...]
+
+
+def flash_fwd(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    carry: Optional[tuple] = None,  # (acc [b,h,sq,d] f32, m [b,h,sq] f32, l f32)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    k_offset: int = 0,
+    sm_scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+):
+    """Unnormalized online attention of q (at q_offset) over k/v (at k_offset).
+
+    Returns (acc, m, l): fp32 running state (continuing ``carry`` if given).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    block_q = _fit_block(sq, block_q)
+    block_k = _fit_block(sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    interpret = _default_interpret() if interpret is None else interpret
+
+    if carry is None:
+        acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+        m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    else:
+        acc0, m0, l0 = carry
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        sm_scale=scale, causal=causal, window=window, q_offset=q_offset,
+        k_offset=k_offset, block_q=block_q, block_k=block_k, nk=nk,
+    )
+    grid = (b, hq, nq, nk)
+    q_spec = pl.BlockSpec((None, None, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0))
+    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, iq, ik: (b_, h // g, ik, 0))
+    vec_spec = pl.BlockSpec((None, None, block_q), lambda b_, h, iq, ik: (b_, h, iq))
+
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
+        out_specs=[q_spec, vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=_compiler_params(),
+    )(q, k, v, acc0, m0, l0)
+    return acc, m, l
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _compiler_params():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        )
+    except Exception:  # pragma: no cover
+        return None
+
+
+# ===========================================================================
+# Backward: dq
+# ===========================================================================
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, L_ref, delta_ref,
+    dq_ref,
+    dq_scr,
+    *, sm_scale, causal, window, q_offset, k_offset, block_q, block_k, nk,
+):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q_start = q_offset + iq * block_q
+    k_start = k_offset + ik * block_k
+    dead = causal & (q_start + block_q - 1 < k_start)
+    if window:
+        dead = dead | (k_start + block_k - 1 < q_start - window + 1)
+
+    @pl.when(~dead)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        do = do_ref[...].astype(jnp.float32)
+        L = L_ref[...]
+        delta = delta_ref[...]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            ok = qpos >= kpos
+            if window:
+                ok = ok & (qpos - kpos < window)
+            s = jnp.where(ok, s, NEG_INF)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - L[:, None]))
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        dq_ref[...] = dq_scr[...]
+
+
+def flash_bwd_dq(
+    q, k, v, do, L, delta,
+    *, causal=True, window=0, q_offset=0, k_offset=0, sm_scale=None,
+    block_q=512, block_k=512, interpret=None,
+):
+    """dq contribution of this (q-chunk, kv-chunk) pair. fp32 output."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    block_q = _fit_block(sq, block_q)
+    block_k = _fit_block(sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    interpret = _default_interpret() if interpret is None else interpret
+
+    kernel = functools.partial(
+        _dq_kernel, sm_scale=scale, causal=causal, window=window, q_offset=q_offset,
+        k_offset=k_offset, block_q=block_q, block_k=block_k, nk=nk,
+    )
+    q_spec = pl.BlockSpec((None, None, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0))
+    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, iq, ik: (b_, h // g, ik, 0))
+    vec_spec = pl.BlockSpec((None, None, block_q), lambda b_, h, iq, ik: (b_, h, iq))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
+        scratch_shapes=[_vmem((block_q, d), jnp.float32)],
+        interpret=interpret,
+        compiler_params=_compiler_params(),
+    )(q, k, v, do, L, delta)
+
+
+# ===========================================================================
+# Backward: dk, dv
+# ===========================================================================
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, L_ref, delta_ref,
+    dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, sm_scale, causal, window, q_offset, k_offset, block_q, block_k, nq, g,
+):
+    ik = pl.program_id(2)
+    t = pl.program_id(3)  # runs over g * nq (q heads of the group x q blocks)
+    iq = t % nq
+
+    @pl.when(t == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_start = q_offset + iq * block_q
+    k_start = k_offset + ik * block_k
+    dead = causal & (q_start + block_q - 1 < k_start)
+    if window:
+        dead = dead | (k_start + block_k - 1 < q_start - window + 1)
+
+    @pl.when(~dead)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        do = do_ref[...].astype(jnp.float32)
+        L = L_ref[...]
+        delta = delta_ref[...]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            ok = qpos >= kpos
+            if window:
+                ok = ok & (qpos - kpos < window)
+            s = jnp.where(ok, s, NEG_INF)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - L[:, None]))  # [bq, bk]
+        dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    @pl.when(t == g * nq - 1)
+    def _write():
+        dk_ref[...] = dk_scr[...]
+        dv_ref[...] = dv_scr[...]
+
+
+def flash_bwd_dkv(
+    q, k, v, do, L, delta,
+    *, causal=True, window=0, q_offset=0, k_offset=0, sm_scale=None,
+    block_q=512, block_k=512, interpret=None,
+):
+    """(dk, dv) contribution of this (q-chunk, kv-chunk) pair (GQA-summed)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    block_q = _fit_block(sq, block_q)
+    block_k = _fit_block(sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    interpret = _default_interpret() if interpret is None else interpret
+
+    kernel = functools.partial(
+        _dkv_kernel, sm_scale=scale, causal=causal, window=window, q_offset=q_offset,
+        k_offset=k_offset, block_q=block_q, block_k=block_k, nq=nq, g=g,
+    )
+    # inner sequential dim covers q heads of the kv group x q blocks
+    q_spec = pl.BlockSpec(
+        (None, None, block_q, d), lambda b_, h, ik, t: (b_, h * g + t // nq, t % nq, 0)
+    )
+    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, ik, t: (b_, h, ik, 0))
+    vec_spec = pl.BlockSpec(
+        (None, None, block_q), lambda b_, h, ik, t: (b_, h * g + t // nq, t % nq)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk, g * nq),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
+        out_specs=[kv_spec, kv_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, sk, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, sk, d), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((block_k, d), jnp.float32), _vmem((block_k, d), jnp.float32)],
+        interpret=interpret,
+        compiler_params=_compiler_params(),
+    )(q, k, v, do, L, delta)

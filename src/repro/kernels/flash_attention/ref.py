@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the flash-attention kernels.
+
+Exact fp32 attention over one (q-chunk, kv-chunk) pair with global position
+offsets (for FPDT chunk scheduling) and optional carry-in state, returning the
+same ``(acc, m, l)`` unnormalized online-softmax state as the Pallas kernel.
+
+Layout: q [b, hq, sq, d], k/v [b, hkv, sk, d]; GQA via head-group mapping.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.online_softmax import NEG_INF, SoftmaxState, finalize, merge, zero_state
+
+
+def _expand_kv(x: jnp.ndarray, hq: int) -> jnp.ndarray:
+    hkv = x.shape[1]
+    if hkv == hq:
+        return x
+    assert hq % hkv == 0
+    return jnp.repeat(x, hq // hkv, axis=1)
+
+
+def attend_chunk(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    k_offset: int = 0,
+    sm_scale: float | None = None,
+    carry: SoftmaxState | None = None,
+) -> SoftmaxState:
+    """Online-softmax state after attending q (at q_offset) to k/v (at k_offset)."""
+    b, hq, sq, d = q.shape
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = k_offset + jnp.arange(k.shape[2])[None, :]
+        ok = qpos >= kpos
+        if window:
+            ok = ok & (qpos - kpos < window)
+        s = jnp.where(ok, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    # fully-masked rows: keep identity state
+    masked = m <= NEG_INF / 2
+    m_safe = jnp.where(masked, NEG_INF, m)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(masked[..., None], 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    state = SoftmaxState(acc=acc, m=m_safe, l=l)
+    if carry is not None:
+        state = merge(carry, state)
+    return state
+
+
+def mha(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    k_offset: int = 0,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Full exact attention (normalized output, q.dtype)."""
+    st = attend_chunk(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                      k_offset=k_offset, sm_scale=sm_scale)
+    return finalize(st).astype(q.dtype)
+
+
+def mha_chunked(q, k, v, n_chunks: int, *, causal: bool = True, sm_scale=None) -> jnp.ndarray:
+    """Full attention computed via chunked online merges (schedule oracle)."""
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    assert sq % n_chunks == 0 and sk % n_chunks == 0
+    cq, ck = sq // n_chunks, sk // n_chunks
+    outs = []
+    for i in range(n_chunks):
+        qi = q[:, :, i * cq : (i + 1) * cq]
+        state = zero_state((b, hq, cq, d))
+        for j in range(i + 1 if causal else n_chunks):
+            kj = k[:, :, j * ck : (j + 1) * ck]
+            vj = v[:, :, j * ck : (j + 1) * ck]
+            state = attend_chunk(
+                qi, kj, vj, causal=causal, q_offset=i * cq, k_offset=j * ck,
+                sm_scale=sm_scale, carry=state,
+            )
+        outs.append(finalize(state).astype(q.dtype))
+    return jnp.concatenate(outs, axis=2)

@@ -1,0 +1,59 @@
+"""Jit-ready linear scan with custom VJP.
+
+The adjoint of a linear scan is another linear scan run in reverse:
+  g_t = dL/dh_t(total) = dout_t + a_{t+1} g_{t+1}
+  db_t = g_t;  da_t = g_t * h_{t-1};  dh0 = a_0 * g_0
+so backward reuses the same Pallas kernel on flipped, shifted inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_scan import kernel as _k
+from repro.kernels.linear_scan import ref as _ref
+
+
+def _scan_impl(a, b, h0, impl, block_s, block_c):
+    if impl == "pallas":
+        return _k.linear_scan(a, b, h0, block_s=block_s, block_c=block_c)
+    return _ref.linear_scan(a, b, h0)
+
+
+@functools.lru_cache(maxsize=None)
+def _make(impl, block_s, block_c):
+    @jax.custom_vjp
+    def f(a, b, h0):
+        return _scan_impl(a, b, h0, impl, block_s, block_c)
+
+    def f_fwd(a, b, h0):
+        h = _scan_impl(a, b, h0, impl, block_s, block_c)
+        return h, (a, h, h0)
+
+    def f_bwd(res, dout):
+        a, h, h0 = res
+        af = a.astype(jnp.float32)
+        # reverse scan for the accumulated adjoint g
+        a_shift = jnp.concatenate([af[:, 1:], jnp.ones_like(af[:, :1])], axis=1)
+        g = _scan_impl(
+            jnp.flip(a_shift, axis=1), jnp.flip(dout.astype(jnp.float32), axis=1),
+            jnp.zeros_like(h0, dtype=jnp.float32), impl, block_s, block_c,
+        )
+        g = jnp.flip(g, axis=1)
+        h_prev = jnp.concatenate([h0.astype(jnp.float32)[:, None], h[:, :-1]], axis=1)
+        da = (g * h_prev).astype(a.dtype)
+        db = g.astype(a.dtype)
+        dh0 = (af[:, 0] * g[:, 0]).astype(h0.dtype)
+        return da, db, dh0
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def linear_scan(a, b, h0=None, *, impl="pallas", block_s=256, block_c=512):
+    """Differentiable inclusive linear scan h_t = a_t h_{t-1} + b_t."""
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    return _make(impl, block_s, block_c)(a, b, h0)

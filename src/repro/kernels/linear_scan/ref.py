@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the linear-scan kernel.
+
+Computes h_t = a_t * h_{t-1} + b_t (elementwise over channels) with initial
+state h0.  Shapes: a, b [batch, seq, chan]; h0 [batch, chan].
+Returns all states h [batch, seq, chan] (inclusive).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    bsz, seq, chan = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, chan), jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a_t = a.astype(jnp.float32).transpose(1, 0, 2)
+    b_t = b.astype(jnp.float32).transpose(1, 0, 2)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a_t, b_t))
+    return hs.transpose(1, 0, 2)
+
+
+def linear_scan_naive(a, b, h0=None):
+    """Python-loop recurrence (tiny tests only)."""
+    import numpy as np
+
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    bsz, seq, chan = a.shape
+    h = np.zeros((bsz, chan)) if h0 is None else np.asarray(h0, np.float64).copy()
+    out = np.zeros_like(a)
+    for t in range(seq):
+        h = a[:, t] * h + b[:, t]
+        out[:, t] = h
+    return out

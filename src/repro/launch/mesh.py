@@ -1,0 +1,26 @@
+"""Production meshes (assignment-mandated shapes).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 512 if multi_pod else 256
+    devices = jax.devices()[:ndev]
+    import numpy as np
+
+    devs = np.asarray(devices).reshape(shape)
+    from jax.sharding import Mesh
+
+    return Mesh(devs, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def dp_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

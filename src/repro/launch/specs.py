@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run currency).
+
+``input_specs(cfg, shape)`` returns the exact input pytree each step kind
+consumes — weak-type-correct, shardable, no device allocation:
+  train   -> {"tokens"/"frame_embeds"/"patch_embeds", "labels"}
+  prefill -> same minus labels
+  decode  -> (cache, inp, pos): one new token against a seq_len KV cache
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import serve as SV
+
+F = jax.ShapeDtypeStruct
+
+
+def _fwd_batch_specs(cfg: ModelConfig, B: int, S: int, with_labels: bool) -> Dict[str, Any]:
+    emb_dt = jnp.dtype(cfg.param_dtype)
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        out["frame_embeds"] = F((B, S, cfg.d_model), emb_dt)
+    elif cfg.frontend == "vision_patches":
+        out["patch_embeds"] = F((B, cfg.num_patches, cfg.d_model), emb_dt)
+        out["tokens"] = F((B, S - cfg.num_patches), jnp.int32)
+    else:
+        out["tokens"] = F((B, S), jnp.int32)
+    if with_labels:
+        ls = S if cfg.frontend != "vision_patches" else S - cfg.num_patches
+        out["labels"] = F((B, ls), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Returns (kind, specs) where specs matches the step function inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return "train", {"batch": _fwd_batch_specs(cfg, B, S, with_labels=True)}
+    if shape.kind == "prefill":
+        return "prefill", {"batch": _fwd_batch_specs(cfg, B, S, with_labels=False)}
+    # decode: one token against a cache of length S
+    cache = jax.eval_shape(lambda: SV.init_cache(cfg, B, S))
+    if cfg.frontend == "audio_frames":
+        inp = {"frame_embeds": F((B, 1, cfg.d_model), jnp.dtype(cfg.param_dtype))}
+    else:
+        inp = {"tokens": F((B, 1), jnp.int32)}
+    return "decode", {"cache": cache, "inp": inp, "pos": F((), jnp.int32)}
+
+
+def params_spec(cfg: ModelConfig):
+    from repro.models import transformer as T
+
+    return jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_spec(cfg: ModelConfig, oc, params_shape):
+    from repro.optim import adamw
+
+    return jax.eval_shape(lambda: adamw.init(oc, params_shape))

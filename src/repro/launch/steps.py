@@ -1,0 +1,131 @@
+"""Step functions lowered by the dry-run, the trainer, and the server.
+
+``build(cfg, par, shape)`` returns (step_fn, arg_specs, in_shardings,
+out_shardings, donate) ready for jax.jit().lower().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.core.parallel import ParallelContext
+from repro.launch import shardings as SH
+from repro.launch import specs as SP
+from repro.models import serve as SV
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def tuned_config(cfg: ModelConfig, shape: ShapeConfig, chunks: Optional[int] = None,
+                 offload: Optional[bool] = None) -> ModelConfig:
+    """Apply the paper's default chunking policy to a cell.
+
+    Chunk size 64K tokens (paper §5.3 sweet spot): u = max(1, S/65536);
+    FFN chunks = 2*u (§5.4); offload on when u > 1."""
+    S = shape.seq_len
+    u = chunks if chunks is not None else max(1, S // 65536)
+    while S % u:
+        u -= 1
+    off = offload if offload is not None else (u > 1)
+    # §Perf B4 epilogue: dropping remat cut X 669->562 ms and C by 25% on
+    # llama3.2-1b train_4k, but the compiled temp memory rose 2.8 -> 19.1
+    # GiB/device — over v5e's 16 GiB.  NOT adopted on this mesh; remat
+    # stays on (the dry-run's memory_analysis is the capacity gate).
+    mlp_chunks = max(1, 2 * u) if u > 1 else 1
+    if cfg.num_experts and shape.kind == "train":
+        # GShard dispatch position tensors scale with tokens x k x E: chunk
+        # the MoE FFN (paper §5.4) to bound the live set (granite: temp
+        # 35.5 -> fits; llama4: 39.8 -> fits)
+        mlp_chunks = max(mlp_chunks, 8)
+    return dataclasses.replace(
+        cfg, fpdt_chunks=u, fpdt_offload=off, mlp_chunks=mlp_chunks,
+    )
+
+
+def build(cfg: ModelConfig, par: ParallelContext, shape: ShapeConfig,
+          oc: Optional[adamw.OptConfig] = None, n_host_chunks: int = 0):
+    kind, arg_specs = SP.input_specs(cfg, shape)
+    pspec = SP.params_spec(cfg)
+    pshard = SH.param_shardings(cfg, par, pspec)
+
+    if kind == "train":
+        oc = oc or adamw.OptConfig(state_dtype=cfg.opt_state_dtype)
+        ospec = SP.opt_spec(cfg, oc, pspec)
+        oshard = SH.opt_shardings(cfg, par, ospec, pspec)
+        bshard = SH.batch_shardings(cfg, par, arg_specs["batch"])
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: T.loss_fn(cfg, par, p, batch), has_aux=True
+            )(params)
+            # force gradients onto the optimizer-state sharding (ZeRO-1 mode:
+            # one reduce-scatter instead of a full all-reduce)
+            grads = jax.tree.map(
+                lambda g, sh: jax.lax.with_sharding_constraint(g, sh),
+                grads, oshard.m)
+            params, opt_state, om = adamw.apply(oc, params, grads, opt_state)
+            metrics = {**metrics, **om}
+            return params, opt_state, metrics
+
+        args = (pspec, ospec, arg_specs["batch"])
+        in_sh = (pshard, oshard, bshard)
+        out_sh = (pshard, oshard, None)
+        return train_step, args, in_sh, out_sh, (0, 1)
+
+    if kind == "prefill":
+        bshard = SH.batch_shardings(cfg, par, arg_specs["batch"])
+        cache_spec = jax.eval_shape(lambda: SV.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cshard = SV.cache_shardings(cfg, par, cache_spec)
+
+        def prefill(params, batch):
+            return SV.prefill_step(cfg, par, params, batch, max_len=shape.seq_len)
+
+        args = (pspec, arg_specs["batch"])
+        return prefill, args, (pshard, bshard), (None, cshard), ()
+
+    # decode
+    cshard = SV.cache_shardings(cfg, par, arg_specs["cache"])
+    if n_host_chunks:  # FPDT-for-inference: cache lives in host memory
+        # host-placement custom-calls reject PARTIAL replication: the cache
+        # must be sharded across every mesh axis -> shard S over all axes.
+        all_axes = tuple(par.mesh.axis_names)
+        ndev = par.mesh.size
+
+        def host_spec(path, leaf):
+            names = [str(getattr(pp, "key", getattr(pp, "name", ""))) for pp in path]
+            stacked = names[0] != "tail"
+            lead = (None,) if stacked else ()
+            off = 1 if stacked else 0
+            sdim = leaf.shape[off + 1] if leaf.ndim - off >= 2 else 0
+            if sdim and sdim % ndev == 0:
+                rest = (None,) * (leaf.ndim - off - 2)
+                return NamedSharding(par.mesh, P(*lead, None, all_axes, *rest),
+                                     memory_kind="pinned_host")
+            return NamedSharding(par.mesh, P(), memory_kind="pinned_host")
+
+        cshard = jax.tree_util.tree_map_with_path(host_spec, arg_specs["cache"])
+    ishard = SH.batch_shardings(cfg, par, arg_specs["inp"])
+
+    def serve_step(cache, inp, pos, params):
+        logits, cache = SV.decode_step(cfg, par, params, cache, inp, pos,
+                                       n_host_chunks=n_host_chunks)
+        if n_host_chunks:
+            # re-offload the updated cache with an *internal* device_put
+            # (out_shardings memory kinds are unsupported for SPMD outputs)
+            cache = jax.tree.map(
+                lambda x, sh: jax.device_put(
+                    jax.lax.with_sharding_constraint(
+                        x, NamedSharding(par.mesh, sh.spec)), sh),
+                cache, cshard,
+            )
+        return logits, cache
+
+    args = (arg_specs["cache"], arg_specs["inp"], arg_specs["pos"], pspec)
+    in_sh = (cshard, ishard, NamedSharding(par.mesh, P()), pshard)
+    out_sh = (None, None if n_host_chunks else cshard)
+    return serve_step, args, in_sh, out_sh, (0,)

@@ -1,0 +1,114 @@
+"""Training CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 100 --batch 8 --seq 256 [--chunks 4 --offload] [--resume auto]
+
+On this CPU container use --reduced (the full configs are exercised through
+the dry-run); on a real TPU fleet drop --reduced and point --mesh at the
+production topology.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--chunks", type=int, default=None, help="FPDT u")
+    ap.add_argument("--offload", action="store_true")
+    ap.add_argument("--remat", default=None, choices=[None, "none", "full", "offload"])
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", default="none", choices=["none", "host8"],
+                    help="host8: 8 fake CPU devices, (2 data, 4 model)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default=None, help="'auto' or a step number")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mesh == "host8":
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import ShapeConfig, get_config, reduced
+    from repro.core.parallel import ParallelContext
+    from repro.data.pipeline import CheckpointableIterator, make_batch_fn
+    from repro.models import transformer as T
+    from repro.optim import adamw
+    from repro.runtime.train_loop import TrainConfig, TrainLoop, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    over = {}
+    if args.chunks:
+        over.update(fpdt_chunks=args.chunks, mlp_chunks=2 * args.chunks)
+    if args.offload:
+        over["fpdt_offload"] = True
+    if args.remat:
+        over["remat"] = args.remat
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+
+    par = None
+    mesh_cm = None
+    if args.mesh == "host8":
+        from jax.sharding import AxisType
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+        par = ParallelContext(mesh=mesh, dp_axes=("data",), attn_impl="pallas")
+        mesh_cm = mesh
+
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    oc = adamw.OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                         total_steps=args.steps, state_dtype=cfg.opt_state_dtype)
+    opt_state = adamw.init(oc, params)
+    tc = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                     log_every=args.log_every, grad_accum=args.grad_accum,
+                     compress_grads=args.compress_grads)
+    step_fn = jax.jit(make_train_step(cfg, par, oc, tc), donate_argnums=(0, 1))
+    bf = make_batch_fn(cfg, ShapeConfig("cli", args.seq, args.batch, "train"))
+    data = CheckpointableIterator(bf)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    start = 0
+    if mgr and args.resume:
+        step = mgr.latest_step() if args.resume == "auto" else int(args.resume)
+        if step is not None:
+            (restored, extra) = mgr.restore(step, {"params": params, "opt": opt_state})
+            params, opt_state = restored["params"], restored["opt"]
+            start = step
+            print(f"[resume] restored step {step}")
+
+    def put(b):
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    loop = TrainLoop(cfg, par, oc, tc, step_fn, data, mgr)
+    ctx = mesh_cm if mesh_cm is not None else _null()
+    with ctx:
+        loop.run(params, opt_state, start_step=start, put_batch=put)
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN with GShard-style grouped capacity dispatch.
+
+Expert-parallel: the expert dimension is sharded over the ``model`` mesh axis
+(EP); token dispatch/combine einsums induce the EP all-to-all under GSPMD.
+Capacity-based dispatch keeps compiled FLOPs at ~active-expert cost
+(6·N_active·D), which the roofline analysis depends on.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.layers import _dense_init
+
+Params = Dict[str, Any]
+
+GROUP_TOKENS = 512  # tokens per dispatch group
+
+
+def init_moe(cfg: ModelConfig, key, dtype) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),
+        "wu": _dense_init(ks[1], (e, d, ff), dtype, fan_in=d),
+        "wd": _dense_init(ks[2], (e, ff, d), dtype, fan_in=ff),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["wg"] = _dense_init(ks[3], (e, d, ff), dtype, fan_in=d)
+    return p
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = math.ceil(
+        tokens_per_group * cfg.experts_per_token / cfg.num_experts * cfg.moe_capacity_factor
+    )
+    return max(4, min(c, tokens_per_group))
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x: jnp.ndarray, shard=None):
+    """x: [b, s, d] -> (y [b, s, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tg = min(GROUP_TOKENS, b * s)
+    assert (b * s) % tg == 0, (b, s, tg)
+    g = (b * s) // tg
+    cap = capacity(tg, cfg)
+
+    xt = x.reshape(g, tg, d)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [g, tg, e]
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)  # [g, tg, k]
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)  # renormalize over chosen
+
+    # load-balancing aux loss (Switch): e * sum(frac_tokens * frac_router)
+    me = jnp.mean(jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    ce = jnp.mean(gates, axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)  # [g, tg, k, e]
+    flat = onehot.reshape(g, tg * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1  # [g, tg*k, e]
+    pos = (pos * flat).sum(-1).reshape(g, tg, k)  # queue position per choice
+    keep = pos < cap
+
+    # dispatch/combine tensors [g, tg, e, cap]
+    disp = (
+        jax.nn.one_hot(topi, e, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype)[..., :cap][..., None, :]
+    ).sum(2)  # sum over k choices -> [g, tg, e, cap]
+    comb = (
+        (topv.astype(x.dtype) * keep.astype(x.dtype))[..., None, None]
+        * jax.nn.one_hot(topi, e, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype)[..., :cap][..., None, :]
+    ).sum(2)
+
+    ein = xt  # [g, tg, d]
+    expert_in = jnp.einsum("gtec,gtd->egcd", disp, ein)  # [e, g, cap, d]
+    if shard is not None:
+        expert_in = shard(expert_in, "expert")
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, p["wg"])) * jnp.einsum(
+            "egcd,edf->egcf", expert_in, p["wu"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", expert_in, p["wu"]))
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["wd"])
+    if shard is not None:
+        expert_out = shard(expert_out, "expert")
+    y = jnp.einsum("gtec,egcd->gtd", comb, expert_out)
+    return y.reshape(b, s, d), aux
+
+
+def moe_ffn_chunked(cfg: ModelConfig, p: Params, x: jnp.ndarray, n_chunks: int, shard=None):
+    """Sequence-chunked MoE (paper §5.4 applied to the MoE FFN)."""
+    if n_chunks <= 1 or x.shape[1] % n_chunks != 0:
+        return moe_ffn(cfg, p, x, shard)
+    b, s, d = x.shape
+    xs = x.reshape(b, n_chunks, s // n_chunks, d).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def step(_, xc):
+        y, aux = moe_ffn(cfg, p, xc, shard)
+        return None, (y, aux)
+
+    _, (ys, auxs) = jax.lax.scan(step, None, xs)
+    return ys.transpose(1, 0, 2, 3).reshape(b, s, d), jnp.mean(auxs)

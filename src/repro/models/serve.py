@@ -1,0 +1,342 @@
+"""Serving path: cache init, prefill, and single-token decode.
+
+Cache layouts (stacked over layer cycles C so decode scans one cycle body):
+  attn        {"k","v": [C, b, S, hkv, dh], "pos_filled": scalar via step arg}
+  local_attn  same with S = window (ring buffer; entry positions tracked)
+  ssm         {"conv": [C, b, k-1, di], "ssm": [C, b, di, ds]}
+  rglru       {"conv": [C, b, k-1, di], "h": [C, b, di]}
+
+Sharding: Ulysses archs shard cache *heads* over the model axis; CP archs
+shard cache *sequence*; SSM/RG states shard channels.  ``fpdt_offload``
+additionally keeps attention KV caches in pinned_host memory and streams
+them chunk-by-chunk through the online-softmax merge at decode time — the
+FPDT pipeline applied to inference (the EXTRA long_500k cell).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.core.online_softmax import NEG_INF, SoftmaxState, finalize, merge, zero_state
+from repro.core.parallel import ParallelContext
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import rglru as R
+from repro.models.transformer import (
+    attn_kind,
+    head_matrix,
+    layout_of,
+    pattern_of,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache(cfg, b, s, dtype):
+    return {
+        "k": jnp.zeros((b, s, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((b, s, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "kpos": jnp.full((b, s), -1, jnp.int32),
+    }
+
+
+def _block_cache(cfg: ModelConfig, kind: str, b: int, max_len: int, dtype):
+    if kind == "attn":
+        return _attn_cache(cfg, b, max_len, dtype)
+    if kind == "local_attn":
+        return _attn_cache(cfg, b, min(cfg.window, max_len), dtype)
+    if kind == "ssm":
+        return {
+            "conv": jnp.zeros((b, cfg.d_conv - 1, cfg.d_inner), dtype),
+            "ssm": jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        }
+    if kind == "rglru":
+        return {
+            "conv": jnp.zeros((b, cfg.d_conv - 1, cfg.d_inner), dtype),
+            "h": jnp.zeros((b, cfg.d_inner), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, b: int, max_len: int) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    pat, n_cycles, tail = layout_of(cfg)
+
+    def stack(make):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_cycles, *x.shape)), make())
+
+    cache = {
+        f"pos{i}": stack(functools.partial(_block_cache, cfg, kind, b, max_len, dtype))
+        for i, kind in enumerate(pat)
+    }
+    if tail:
+        cache["tail"] = [_block_cache(cfg, kind, b, max_len, dtype) for kind in tail]
+    return cache
+
+
+def cache_shardings(cfg: ModelConfig, par: ParallelContext, cache):
+    """NamedShardings for a cache pytree (heads/seq/channels per DESIGN.md).
+
+    Shape-aware: a dim is only sharded when divisible by its axis (kv heads
+    smaller than the model axis fall back to sequence sharding; batch=1
+    long-context decode leaves batch unsharded)."""
+
+    def dp_if(n):
+        return par.dp_axes if n % par.dp == 0 and n >= par.dp else None
+
+    def sp_if(n):
+        return par.sp_axis if n % par.sp == 0 and n >= par.sp else None
+
+    def spec_for(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        stacked = names[0] != "tail"
+        lead = (None,) if stacked else ()
+        off = 1 if stacked else 0
+        shape = leaf.shape[off:]
+        if "kpos" in names:  # [*, b, s]
+            return par.ns(*lead, dp_if(shape[0]), None)
+        if names[-1] in ("k", "v"):  # [*, b, s, h, dh]
+            b, s, h, _ = shape
+            if sp_if(h):  # Ulysses-style: heads over model
+                return par.ns(*lead, dp_if(b), None, par.sp_axis, None)
+            return par.ns(*lead, dp_if(b), sp_if(s), None, None)  # CP: seq
+        if "conv" in names:  # [*, b, k-1, di]
+            return par.ns(*lead, dp_if(shape[0]), None, sp_if(shape[2]))
+        if "ssm" in names:  # [*, b, di, ds]
+            return par.ns(*lead, dp_if(shape[0]), sp_if(shape[1]), None)
+        if names[-1] == "h":  # [*, b, di]
+            return par.ns(*lead, dp_if(shape[0]), sp_if(shape[1]))
+        return par.ns()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single new token against the cache)
+# ---------------------------------------------------------------------------
+
+
+def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Params,
+                      x: jnp.ndarray, cache: Params, pos, *, window: int = 0,
+                      n_host_chunks: int = 0):
+    """x [b, 1, d]; returns (attn_out [b, 1, qd], new cache)."""
+    b = x.shape[0]
+    q, k, v = L.qkv_proj(cfg, p, x)  # [b, 1, h, dh]
+    posv = pos + jnp.zeros((1,), jnp.int32)
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % S, jnp.minimum(pos, S - 1))
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(
+        cache["kpos"], jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32), (0, slot)
+    )
+
+    g = cfg.num_heads // cfg.num_kv_heads
+    qf = q[:, 0].astype(jnp.float32)  # [b, hq, dh]
+    scale = cfg.head_dim ** -0.5
+
+    def attend(kc, vc, kp):
+        """Partial online-softmax state [b, h, 1, d] of q against this KV slab."""
+        ke = jnp.repeat(kc.astype(jnp.float32), g, axis=2) if g > 1 else kc.astype(jnp.float32)
+        ve = jnp.repeat(vc.astype(jnp.float32), g, axis=2) if g > 1 else vc.astype(jnp.float32)
+        s = jnp.einsum("bhd,bshd->bhs", qf, ke) * scale
+        ok = (kp >= 0) & (kp <= pos)
+        if window:
+            ok = ok & (kp > pos - window)
+        s = jnp.where(ok[:, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        pr = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m[..., None]))
+        l = pr.sum(-1)
+        acc = jnp.einsum("bhs,bshd->bhd", pr, ve)
+        return SoftmaxState(acc[:, :, None, :], m[:, :, None], l[:, :, None])
+
+    if n_host_chunks and S % n_host_chunks == 0:
+        # FPDT-for-inference: stream host-resident KV chunk by chunk
+        cs = S // n_host_chunks
+        # slab placement: seq over ALL axes (host<->device moves must not be
+        # partially replicated), else unsharded
+        slab_spec = None
+        if par is not None and par.mesh is not None:
+            all_axes = tuple(par.mesh.axis_names)
+            if cs % par.mesh.size == 0:
+                slab_spec = (None, all_axes, None, None)
+        state = zero_state((b, cfg.num_heads, 1, cfg.head_dim))
+        for c in range(n_host_chunks):
+            kc = jax.lax.slice_in_dim(ck, c * cs, (c + 1) * cs, axis=1)
+            vc = jax.lax.slice_in_dim(cv, c * cs, (c + 1) * cs, axis=1)
+            kp = jax.lax.slice_in_dim(kpos, c * cs, (c + 1) * cs, axis=1)
+            if par is not None:
+                kc = par.to_device(kc, *(slab_spec or ()))
+                vc = par.to_device(vc, *(slab_spec or ()))
+            state = merge(state, attend(kc, vc, kp))
+        o = finalize(state)[:, :, 0]  # [b, h, d]
+    else:
+        o = finalize(attend(ck, cv, kpos))[:, :, 0]
+    o = o.reshape(b, 1, cfg.q_dim).astype(x.dtype)
+    out = o @ p["wo"]
+    # NOTE: host residency of the updated cache comes from serve_step's
+    # out_shardings (memory_kind=pinned_host) — no explicit put needed.
+    new_cache = {"k": ck, "v": cv, "kpos": kpos}
+    return out, new_cache
+
+
+def _decode_block(cfg, par, kind, p, h, cache, pos, n_host_chunks=0):
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        hn = L.apply_norm(cfg, p["norm1"], h)
+        o, cache = _decode_attention(cfg, par, p["attn"], hn, cache, pos,
+                                     window=window,
+                                     n_host_chunks=0 if kind == "local_attn" else n_host_chunks)
+        h = h + o
+        hn2 = L.apply_norm(cfg, p["norm2"], h)
+        if cfg.num_experts:
+            from repro.models import moe as MOE
+
+            y, _ = MOE.moe_ffn(cfg, p["moe"], hn2)
+        else:
+            y = L.mlp_block(cfg, p["mlp"], hn2)
+        return h + y, cache
+    if kind == "ssm":
+        hn = L.apply_norm(cfg, p["norm"], h)
+        y, st = M.mamba_decode_step(cfg, p["mixer"], hn, cache)
+        return h + y, st
+    if kind == "rglru":
+        hn = L.apply_norm(cfg, p["norm1"], h)
+        y, st = R.rglru_decode_step(cfg, p["mixer"], hn, cache)
+        h = h + y
+        hn2 = L.apply_norm(cfg, p["norm2"], h)
+        return h + L.mlp_block(cfg, p["mlp"], hn2), st
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
+                cache: Params, inp: Dict[str, jnp.ndarray], pos,
+                n_host_chunks: int = 0):
+    """One decode step. inp: {"tokens": [b,1]} or {"frame_embeds": [b,1,d]}.
+
+    Returns (logits [b, vocab] fp32, new cache)."""
+    if cfg.frontend == "audio_frames":
+        h = inp["frame_embeds"]
+        # sinusoidal positional embedding at the (traced) decode position
+        d = cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        ang = jnp.asarray(pos, jnp.float32) / jnp.power(10000.0, dim / d)
+        pe = jnp.zeros((1, d), jnp.float32).at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+        h = h + pe.astype(h.dtype)[None]
+    else:
+        h = params["embed"][inp["tokens"]].astype(jnp.dtype(cfg.param_dtype))
+    pat, n_cycles, tail = layout_of(cfg)
+
+    def cycle_body(h, scans):
+        cyc_p, cyc_cache = scans
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            h, nc = _decode_block(cfg, par, kind, cyc_p[f"pos{i}"], h,
+                                  cyc_cache[f"pos{i}"], pos, n_host_chunks)
+            new_caches[f"pos{i}"] = nc
+        return h, new_caches
+
+    h, new_cycle_caches = jax.lax.scan(
+        cycle_body, h, (params["cycles"], {k: cache[k] for k in cache if k != "tail"})
+    )
+    new_cache = dict(new_cycle_caches)
+    if tail:
+        new_tail = []
+        for i, kind in enumerate(tail):
+            h, nc = _decode_block(cfg, par, kind, params["tail"][i], h,
+                                  cache["tail"][i], pos, n_host_chunks)
+            new_tail.append(nc)
+        new_cache["tail"] = new_tail
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = (h[:, 0] @ head_matrix(cfg, params)).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + cache population
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
+                 batch: Dict[str, jnp.ndarray], max_len: int):
+    """Forward over the prompt, returning (last-token logits, filled cache)."""
+    from repro.models import transformer as T
+
+    h = T.embed_input(cfg, params, batch)
+    h = h.astype(jnp.dtype(cfg.param_dtype))
+    b, s, _ = h.shape
+    pat, n_cycles, tail = layout_of(cfg)
+    if par is not None and par.mesh is not None:
+        h = par.seq_sharded(h)
+
+    def prefill_block(kind, p, h):
+        if kind in ("attn", "local_attn"):
+            window = cfg.window if kind == "local_attn" else 0
+            hn = L.apply_norm(cfg, p["norm1"], h)
+            from repro.core import fpdt
+
+            o = fpdt.fpdt_attention(cfg, par, p["attn"], hn,
+                                    kind=attn_kind(cfg, par), window=window)
+            h = h + o @ p["attn"]["wo"]
+            # cache: recompute roped k/v (cheap vs attention)
+            _, k, v = L.qkv_proj(cfg, p["attn"], hn)
+            k = L.apply_rope(k, jnp.arange(s), cfg.rope_theta)
+            W = min(cfg.window, max_len) if kind == "local_attn" else max_len
+            ck = _attn_cache(cfg, b, W, h.dtype)
+            take = min(W, s)
+            cache = {
+                "k": ck["k"].at[:, :take].set(k[:, s - take:].astype(ck["k"].dtype)),
+                "v": ck["v"].at[:, :take].set(v[:, s - take:].astype(ck["v"].dtype)),
+                "kpos": ck["kpos"].at[:, :take].set(jnp.arange(s - take, s)[None]),
+            }
+            hn2 = L.apply_norm(cfg, p["norm2"], h)
+            if cfg.num_experts:
+                from repro.models import moe as MOE
+
+                y, _ = MOE.moe_ffn_chunked(cfg, p["moe"], hn2, cfg.mlp_chunks)
+            else:
+                y = L.mlp_chunked(cfg, p["mlp"], hn2, cfg.mlp_chunks)
+            return h + y, cache
+        if kind == "ssm":
+            hn = L.apply_norm(cfg, p["norm"], h)
+            y, st = M.mamba_mixer(cfg, p["mixer"], hn, None, None)
+            return h + y, st
+        if kind == "rglru":
+            hn = L.apply_norm(cfg, p["norm1"], h)
+            y, st = R.rglru_mixer(cfg, p["mixer"], hn, None, None, scan_impl="xla")
+            h = h + y
+            hn2 = L.apply_norm(cfg, p["norm2"], h)
+            return h + L.mlp_chunked(cfg, p["mlp"], hn2, cfg.mlp_chunks), st
+        raise ValueError(kind)
+
+    def cycle_body(h, cyc_p):
+        caches = {}
+        for i, kind in enumerate(pat):
+            h, c = prefill_block(kind, cyc_p[f"pos{i}"], h)
+            caches[f"pos{i}"] = c
+        if par is not None and par.mesh is not None:
+            h = par.seq_sharded(h)
+        return h, caches
+
+    h, cycle_caches = jax.lax.scan(cycle_body, h, params["cycles"])
+    cache = dict(cycle_caches)
+    if tail:
+        tcaches = []
+        for i, kind in enumerate(tail):
+            h, c = prefill_block(kind, params["tail"][i], h)
+            tcaches.append(c)
+        cache["tail"] = tcaches
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = (h[:, -1] @ head_matrix(cfg, params)).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,22 @@
+# NOTE: no XLA_FLAGS here on purpose — unit tests and benches must see the
+# single real CPU device.  Multi-device tests run via subprocess (see
+# tests/test_distributed.py); the 512-device dry-run sets its own flags.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def rand(rng, *shape, dtype=np.float32):
+    import jax.numpy as jnp
+
+    return jnp.asarray(rng.standard_normal(shape), dtype)

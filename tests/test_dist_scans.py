@@ -1,0 +1,60 @@
+"""Sequence-parallel scan algorithms (§Perf A2/A3) vs their serial oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.linear_scan import ref as LSR
+from repro.models import mamba as M
+from repro.models.rglru import dist_linear_scan
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from([1, 2, 4, 8]))
+def test_dist_linear_scan_matches_serial(seed, n):
+    rng = np.random.default_rng(seed)
+    b, s, c = 2, 16, 4
+    a = jnp.asarray(rng.uniform(-0.95, 0.95, (b, s, c)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, c)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, c)), jnp.float32)
+    want = LSR.linear_scan_naive(a, x, h0)
+    got = dist_linear_scan(a, x, n, h0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_selective_scan_dist_matches_serial(rng, n, with_h0):
+    b, s, di, ds = 2, 32, 8, 4
+    xc = jnp.asarray(rng.standard_normal((b, s, di)) * 0.3, jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32))
+    A_log = jnp.asarray(np.log(rng.uniform(0.5, 2.0, (di, ds))), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, ds)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, ds)), jnp.float32)
+    h0 = (jnp.asarray(rng.standard_normal((b, di, ds)) * 0.5, jnp.float32)
+          if with_h0 else None)
+    y0, hl0 = M.selective_scan(xc, dt, A_log, B, C, h0, block_s=8)
+    y1, hl1 = M.selective_scan_dist(xc, dt, A_log, B, C, h0, n_shards=n, block_s=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hl1), np.asarray(hl0), rtol=2e-4, atol=2e-4)
+
+
+def test_selective_scan_dist_grads(rng):
+    b, s, di, ds = 1, 16, 4, 2
+    xc = jnp.asarray(rng.standard_normal((b, s, di)) * 0.3, jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32))
+    A_log = jnp.asarray(np.log(rng.uniform(0.5, 2.0, (di, ds))), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, ds)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, ds)), jnp.float32)
+
+    def f_serial(xc, dt):
+        return M.selective_scan(xc, dt, A_log, B, C, block_s=4)[0].sum()
+
+    def f_dist(xc, dt):
+        return M.selective_scan_dist(xc, dt, A_log, B, C, n_shards=4, block_s=4)[0].sum()
+
+    g0 = jax.grad(f_serial, argnums=(0, 1))(xc, dt)
+    g1 = jax.grad(f_dist, argnums=(0, 1))(xc, dt)
+    for a, b_ in zip(g0, g1):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-3, atol=1e-3)

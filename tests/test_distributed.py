@@ -1,0 +1,43 @@
+"""Multi-device correctness + dry-run smoke, via subprocess (the main pytest
+process keeps exactly one visible device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def _run(script_rel, env_extra=None, timeout=3000):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.update(env_extra or {})
+    r = subprocess.run([sys.executable, os.path.join(HERE, script_rel)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise AssertionError(f"exit {r.returncode}\nSTDOUT:\n{r.stdout[-4000:]}\n"
+                             f"STDERR:\n{r.stderr[-4000:]}")
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_fpdt_distributed_correctness():
+    out = _run("distributed/check_fpdt_distributed.py")
+    assert "ALL DISTRIBUTED CHECKS PASSED" in out
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell():
+    """A full production-mesh (512-dev) dry-run cell must lower+compile."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "llama3.2-1b",
+         "--shape", "train_4k", "--mesh", "multi", "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, timeout=3000, env=env,
+        cwd=os.path.join(HERE, ".."),
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "[OK ]" in r.stdout

@@ -1,0 +1,74 @@
+"""FPDT chunk-pipeline correctness: u>1 (+offload) == u=1 baseline, for
+outputs AND gradients — the paper's central exactness claim (it is a pure
+systems optimization, Fig. 14)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import fpdt
+from repro.core.parallel import ParallelContext
+from repro.models import layers as L
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-1b")), param_dtype="float32")
+    key = jax.random.PRNGKey(1)
+    p = L.init_attn(cfg, key, jnp.float32)
+    b, S = 2, 64
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, S, cfg.d_model), jnp.float32)
+    do = jax.random.normal(jax.random.fold_in(key, 2), (b, S, cfg.q_dim), jnp.float32)
+    return cfg, p, x, do
+
+
+def _run(cfg, p, x, do, u, offload, impl="pallas", window=0):
+    c = dataclasses.replace(cfg, fpdt_chunks=u, fpdt_offload=offload, block_q=16, block_k=16)
+    par = ParallelContext(mesh=None, attn_impl=impl)
+
+    def f(x, p):
+        o = fpdt.fpdt_attention(c, par, p, x, kind="local", window=window)
+        return (o * do).sum(), o
+
+    (val, o), grads = jax.value_and_grad(f, argnums=(0, 1), has_aux=True)(x, p)
+    return o, grads
+
+
+@pytest.mark.parametrize("u,offload,impl", [
+    (2, False, "pallas"), (4, False, "pallas"), (4, True, "pallas"),
+    (4, True, "xla_flash"), (8, True, "pallas"),
+])
+def test_fpdt_equals_baseline(setup, u, offload, impl):
+    cfg, p, x, do = setup
+    o1, g1 = _run(cfg, p, x, do, 1, False)
+    o, g = _run(cfg, p, x, do, u, offload, impl)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o1), rtol=2e-4, atol=2e-4)
+    for a, b_ in zip(jax.tree.leaves(g), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("window", [8, 24])
+def test_fpdt_windowed(setup, window):
+    cfg, p, x, do = setup
+    o1, g1 = _run(cfg, p, x, do, 1, False, window=window)
+    o, g = _run(cfg, p, x, do, 4, True, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o1), rtol=2e-4, atol=2e-4)
+    for a, b_ in zip(jax.tree.leaves(g), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=5e-4, atol=5e-4)
+
+
+def test_qkv_bias_grads(setup):
+    cfg, _, x, do = setup
+    cfg = dataclasses.replace(cfg, qkv_bias=True)
+    p = L.init_attn(cfg, jax.random.PRNGKey(3), jnp.float32)
+    p = {k: (v + 0.01 if k.startswith("b") else v) for k, v in p.items()}
+    o1, g1 = _run(cfg, p, x, do, 1, False)
+    o, g = _run(cfg, p, x, do, 4, True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o1), rtol=2e-4, atol=2e-4)
+    assert {"bq", "bk", "bv"} <= set(g[1].keys())
+    assert float(jnp.abs(g[1]["bq"]).sum()) > 0  # bias grads flow
+    for a, b_ in zip(jax.tree.leaves(g), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=5e-4, atol=5e-4)

@@ -1,0 +1,53 @@
+"""Linear-scan kernel vs naive recurrence + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.linear_scan import ops as O
+from repro.kernels.linear_scan import ref as R
+
+
+@pytest.mark.parametrize("b,s,c,bs,bc", [(1, 8, 4, 4, 4), (2, 32, 8, 8, 4), (1, 24, 6, 8, 3)])
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_matches_naive(rng, b, s, c, bs, bc, impl):
+    a = jnp.asarray(rng.uniform(-0.99, 0.99, (b, s, c)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, c)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, c)), jnp.float32)
+    got = O.linear_scan(a, x, h0, impl=impl, block_s=bs, block_c=bc)
+    np.testing.assert_allclose(np.asarray(got), R.linear_scan_naive(a, x, h0),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_grads(rng, impl):
+    b, s, c = 1, 16, 4
+    a = jnp.asarray(rng.uniform(0.2, 0.95, (b, s, c)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, c)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, c)), jnp.float32)
+
+    def loss_ref(a, x, h0):
+        return (R.linear_scan(a, x, h0) ** 2).sum()
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(a, x, h0)
+
+    def loss_k(a, x, h0):
+        return (O.linear_scan(a, x, h0, impl=impl, block_s=8, block_c=4) ** 2).sum()
+
+    g = jax.jit(jax.grad(loss_k, argnums=(0, 1, 2)))(a, x, h0)
+    for u, w in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(w), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), s=st.sampled_from([4, 8, 12, 16]))
+def test_block_boundary_invariance(seed, s):
+    """Result must not depend on the block size (the FPDT chunk boundary)."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(-0.9, 0.9, (1, s, 4)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((1, s, 4)), jnp.float32)
+    outs = [np.asarray(O.linear_scan(a, x, impl="pallas", block_s=bs, block_c=4))
+            for bs in (1, 2, 4) if s % bs == 0]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)

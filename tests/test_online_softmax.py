@@ -1,0 +1,54 @@
+"""Property tests (hypothesis) for the online-softmax merge — the invariant
+the whole FPDT schedule rests on."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.online_softmax import SoftmaxState, finalize, merge, zero_state
+from repro.kernels.flash_attention import ref as R
+
+
+def _state(rng, sq, d, scale):
+    acc = jnp.asarray(rng.standard_normal((sq, d)) * scale, jnp.float32)
+    m = jnp.asarray(rng.standard_normal(sq) * scale, jnp.float32)
+    l = jnp.asarray(rng.uniform(0.1, 2.0, sq), jnp.float32)
+    return SoftmaxState(acc=acc, m=m, l=l)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(0.1, 20.0))
+def test_merge_associative_commutative(seed, scale):
+    rng = np.random.default_rng(seed)
+    a, b, c = (_state(rng, 4, 8, scale) for _ in range(3))
+    left = merge(merge(a, b), c)
+    right = merge(a, merge(b, c))
+    for u, w in zip(left, right):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(w), rtol=1e-5, atol=1e-5)
+    ab, ba = merge(a, b), merge(b, a)
+    for u, w in zip(ab, ba):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(w), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_merge_identity(seed):
+    rng = np.random.default_rng(seed)
+    a = _state(rng, 4, 8, 1.0)
+    z = zero_state((4, 8))
+    out = merge(z, a)
+    for u, w in zip(out, a):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(w), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_chunks=st.sampled_from([1, 2, 4, 8]))
+def test_chunked_attention_equals_full(seed, n_chunks):
+    """Any chunk schedule of online merges == exact softmax attention."""
+    rng = np.random.default_rng(seed)
+    b, h, s, d = 1, 2, 16, 8
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    full = R.mha(q, k, v, causal=True)
+    chunked = R.mha_chunked(q, k, v, n_chunks, causal=True)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full), rtol=1e-5, atol=1e-5)
