@@ -19,10 +19,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.configs import get_config, reduced
 from repro.core.parallel import ParallelContext
+from repro.launch.mesh import make_compat_mesh
 from repro.models import transformer as T
 
 
@@ -32,7 +32,7 @@ def main():
     ap.add_argument("--chunks", type=int, default=4)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((2, 4), ("data", "model"))
     par = ParallelContext(mesh=mesh, dp_axes=("data",), attn_impl="pallas")
     base = dataclasses.replace(reduced(get_config("llama3.2-1b")),
                                num_layers=4, block_q=256, block_k=256)

@@ -28,6 +28,8 @@ from typing import Any, Dict, Optional
 
 import jax
 import ml_dtypes
+
+from repro.runtime import placement
 import numpy as np
 
 
@@ -139,6 +141,6 @@ class CheckpointManager:
             meta = index[key]
             raw = np.concatenate([np.load(os.path.join(path, fn)) for fn in meta["files"]])
             arr = np.frombuffer(raw.tobytes(), _np_dtype(meta["dtype"])).reshape(meta["shape"])
-            leaves.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
+            leaves.append(placement.default_policy().put(arr, shd))
         _, tdef = jax.tree_util.tree_flatten(target)
         return jax.tree_util.tree_unflatten(tdef, leaves), manifest["extra"]

@@ -11,11 +11,15 @@ One implementation covers both the paper's baseline and its contribution:
                      gathers sequence (GSPMD reshard induced by a sharding
                      constraint), online attention continues one softmax
                      across KV chunks j <= i, and idle KV chunks are
-                     offloaded to pinned_host memory and fetched back
-                     chunk-by-chunk (double buffering is structural: the
-                     fetch of chunk j+1 carries no data dependence on the
-                     compute of chunk j, so XLA's async copy-start/copy-done
-                     overlaps them).
+                     offloaded to host memory and fetched back chunk-by-chunk
+                     with *explicit* double buffering: the fetch of chunk
+                     j+1 is issued before the chunk-j kernel (see
+                     ``runtime.placement.double_buffered``), so the async
+                     copy-start/copy-done pair overlaps chunk compute by
+                     program order.  All residency decisions route through
+                     ``runtime.placement.PlacementPolicy`` — on a backend
+                     with no pinned-host pool (e.g. CPU) offload degrades
+                     to a no-op and the pipeline still matches u=1 exactly.
 
 Backward is a custom VJP implementing the paper's Fig. 7 nested loop:
 outer loop over KV chunks j, inner loop over query chunks i >= j, using the
@@ -46,6 +50,7 @@ from repro.core.online_softmax import SoftmaxState, finalize, lse
 from repro.core.parallel import ParallelContext
 from repro.kernels.flash_attention import ops as fa
 from repro.models.layers import apply_rope, qkv_proj
+from repro.runtime.placement import double_buffered
 
 Params = Dict[str, Any]
 
@@ -109,6 +114,8 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
     bq, bk = cfg.block_q, cfg.block_k
     assert seq_len % u == 0, (seq_len, u)
     cq = seq_len // u
+    # Offload *requested*: capability degradation (no pinned-host pool ->
+    # identity + one logged warning) happens inside the placement policy.
     do_offload = offload and par.offload_to_host and u > 1
     kv_spec = _host_spec_kv(par, kind, hkv * rep, seq_len // u)
     q_spec = _host_spec_kv(par, kind, hq, seq_len // u)
@@ -162,11 +169,16 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
             xi = jax.lax.slice_in_dim(x, i * cq, (i + 1) * cq, axis=1)
             qi, ki, vi = project(p, xi, i)
             carry = None
-            for j in range(i):
-                if not pair_live(i, j):
-                    continue
+            # Explicit double buffering (Fig. 6): the fetch of KV chunk j+1
+            # is issued before the chunk-j kernel, so the host->device copy
+            # overlaps compute by program order, not XLA scheduling luck.
+            live = [j for j in range(i) if pair_live(i, j)]
+
+            def fetch_kv(j):
                 kj, vj = kv_store[j]
-                kj, vj = to_dev(kj), to_dev(vj)  # fetch (prefetch overlaps)
+                return to_dev(kj), to_dev(vj)
+
+            for j, (kj, vj) in zip(live, double_buffered(live, fetch_kv)):
                 carry = fa.chunk_fwd(
                     qi, kj, vj, carry, causal=True, window=window,
                     q_offset=i * cq, k_offset=j * cq, block_q=bq, block_k=bk,
@@ -210,13 +222,21 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
         dqs: list = [None] * u
         dks: list = [None] * u
         dvs: list = [None] * u
-        for j in range(u):
+
+        # Fig. 7 schedule with explicit double buffering on both loops: the
+        # next KV chunk's fetch is issued before this chunk's inner loop,
+        # and the next query chunk's fetch before the current (i, j) pair's
+        # kernels — each copy overlaps the preceding chunk's compute.
+        def fetch_kv(j):
             kj, vj = kv_store[j]
-            kj, vj = to_dev(kj), to_dev(vj)
-            for i in range(j, u):
-                if not pair_live(i, j):
-                    continue
-                qi = to_dev(res_q[i], q_spec)
+            return to_dev(kj), to_dev(vj)
+
+        def fetch_q(i):
+            return to_dev(res_q[i], q_spec)
+
+        for j, (kj, vj) in zip(range(u), double_buffered(range(u), fetch_kv)):
+            inner = [i for i in range(j, u) if pair_live(i, j)]
+            for i, qi in zip(inner, double_buffered(inner, fetch_q)):
                 kwargs = dict(causal=True, window=window, q_offset=i * cq,
                               k_offset=j * cq, block_q=bq, block_k=bk, impl=impl)
                 dk_c, dv_c = fa.chunk_bwd_dkv(qi, kj, vj, dos[i], Ls[i], deltas[i], **kwargs)

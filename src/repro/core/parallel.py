@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.runtime.placement import PlacementPolicy, default_policy
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelContext:
@@ -30,8 +32,19 @@ class ParallelContext:
     sp_axis: Optional[str] = "model"
     attn_impl: str = "pallas"  # chunk-op kernel impl: pallas | xla_flash | ref
     offload_to_host: bool = True  # honor fpdt_offload / remat-offload configs
+    placement: Optional[PlacementPolicy] = None  # None -> probe-once default
 
     # ------------------------------------------------------------------
+    @property
+    def pol(self) -> PlacementPolicy:
+        """The backend-capability policy all placement ops route through."""
+        return self.placement if self.placement is not None else default_policy()
+
+    @property
+    def offload_active(self) -> bool:
+        """Offload requested here AND possible on this backend."""
+        return self.offload_to_host and self.pol.can_offload
+
     @property
     def sp(self) -> int:
         if self.mesh is None or self.sp_axis is None:
@@ -47,11 +60,10 @@ class ParallelContext:
             n *= self.mesh.shape[a]
         return n
 
-    def ns(self, *spec, memory_kind: Optional[str] = None) -> Optional[NamedSharding]:
+    def ns(self, *spec) -> Optional[NamedSharding]:
         if self.mesh is None:
             return None
-        kw = {"memory_kind": memory_kind} if memory_kind else {}
-        return NamedSharding(self.mesh, P(*spec), **kw)
+        return NamedSharding(self.mesh, P(*spec))
 
     def constrain(self, x: jnp.ndarray, *spec) -> jnp.ndarray:
         if self.mesh is None:
@@ -80,22 +92,16 @@ class ParallelContext:
         """[b, s, h, d] KV replicated across model (CP all-gather)."""
         return self.constrain(x, self.dp_axes, None, None, None)
 
-    # --- host offload --------------------------------------------------
+    # --- host offload (routed through the placement policy) ------------
     def to_host(self, x: jnp.ndarray, *spec) -> jnp.ndarray:
         if not self.offload_to_host:
             return x
-        if self.mesh is None:
-            s = jax.sharding.SingleDeviceSharding(jax.devices()[0], memory_kind="pinned_host")
-            return jax.device_put(x, s)
-        return jax.device_put(x, self.ns(*spec, memory_kind="pinned_host"))
+        return self.pol.to_host(x, self.mesh, spec)
 
     def to_device(self, x: jnp.ndarray, *spec) -> jnp.ndarray:
         if not self.offload_to_host:
             return x
-        if self.mesh is None:
-            s = jax.sharding.SingleDeviceSharding(jax.devices()[0], memory_kind="device")
-            return jax.device_put(x, s)
-        return jax.device_put(x, self.ns(*spec, memory_kind="device"))
+        return self.pol.to_device(x, self.mesh, spec)
 
 
 def make_shard_fn(par: Optional[ParallelContext]):

@@ -33,6 +33,7 @@ from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
 from repro.core.parallel import ParallelContext
 from repro.launch import steps as ST
 from repro.launch.mesh import dp_axes_of, make_production_mesh
+from repro.runtime.placement import PlacementPolicy
 
 COLL_RE = re.compile(
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
@@ -100,14 +101,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, chunks=None, offload=N
 
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
-    # NOTE: offload_to_host=False for the big-mesh dry-run: XLA:CPU's SPMD
+    # NOTE: offload disabled for the big-mesh dry-run: XLA:CPU's SPMD
     # partitioner rejects annotate_device_placement custom-calls produced by
     # in-graph host offload at this scale ("side-effect ops cannot be
     # replicated") — a backend limitation, not a sharding bug; the offload
     # path compiles+runs at the 8-device mesh (tests) and in the host-KV
     # decode cells.  Chunking semantics are unchanged ("FPDT w. chunking").
+    # The disable is expressed through the placement policy (the single
+    # layer that owns memory-kind decisions), not ad-hoc flags downstream.
+    pol = PlacementPolicy.probe(mesh.devices.flat[0], offload_enabled=False)
     par = ParallelContext(mesh=mesh, dp_axes=dp_axes_of(mesh), attn_impl="xla_flash",
-                          offload_to_host=False)
+                          offload_to_host=False, placement=pol)
     cfg = ST.tuned_config(get_config(arch), shape, chunks=chunks, offload=offload)
     n_host_chunks = 0
     if shape.kind == "decode" and shape.seq_len >= 500_000 and cfg.family in ("dense",):
@@ -140,6 +144,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, chunks=None, offload=N
             "host_argument_bytes": ma.host_argument_size_in_bytes,
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per program
+            ca = ca[0] if ca else {}
         rec["cost"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

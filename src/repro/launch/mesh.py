@@ -1,12 +1,40 @@
-"""Production meshes (assignment-mandated shapes).
+"""Production meshes (assignment-mandated shapes) + mesh version compat.
 
 A FUNCTION, not a module constant: importing this module never touches jax
 device state.
+
+``jax.sharding.AxisType`` (explicit axis-type meshes) only exists on newer
+jax releases; on older installs meshes are built without explicit axis
+types — every axis there is Auto-typed already, so semantics are identical.
+All mesh construction in the repo goes through :func:`make_compat_mesh`.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType
+except ImportError:  # older jax: all mesh axes are implicitly Auto
+    AxisType = None
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def make_compat_mesh(shape, axes, devices=None):
+    """Version-portable mesh constructor (explicit Auto axis types when the
+    installed jax supports them, plain mesh otherwise)."""
+    if devices is None:
+        return jax.make_mesh(tuple(shape), tuple(axes), **_axis_type_kwargs(len(axes)))
+    import numpy as np
+
+    from jax.sharding import Mesh
+
+    devs = np.asarray(devices).reshape(shape)
+    return Mesh(devs, tuple(axes), **_axis_type_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,12 +42,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     ndev = 512 if multi_pod else 256
     devices = jax.devices()[:ndev]
-    import numpy as np
-
-    devs = np.asarray(devices).reshape(shape)
-    from jax.sharding import Mesh
-
-    return Mesh(devs, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes, devices)
 
 
 def dp_axes_of(mesh) -> tuple:

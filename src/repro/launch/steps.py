@@ -93,8 +93,12 @@ def build(cfg: ModelConfig, par: ParallelContext, shape: ShapeConfig,
     if n_host_chunks:  # FPDT-for-inference: cache lives in host memory
         # host-placement custom-calls reject PARTIAL replication: the cache
         # must be sharded across every mesh axis -> shard S over all axes.
+        # Memory kinds come from the placement policy: on a backend with no
+        # pinned-host pool these become plain device-resident shardings.
         all_axes = tuple(par.mesh.axis_names)
         ndev = par.mesh.size
+
+        on_host = par.offload_active  # capable backend AND context opted in
 
         def host_spec(path, leaf):
             names = [str(getattr(pp, "key", getattr(pp, "name", ""))) for pp in path]
@@ -104,9 +108,9 @@ def build(cfg: ModelConfig, par: ParallelContext, shape: ShapeConfig,
             sdim = leaf.shape[off + 1] if leaf.ndim - off >= 2 else 0
             if sdim and sdim % ndev == 0:
                 rest = (None,) * (leaf.ndim - off - 2)
-                return NamedSharding(par.mesh, P(*lead, None, all_axes, *rest),
-                                     memory_kind="pinned_host")
-            return NamedSharding(par.mesh, P(), memory_kind="pinned_host")
+                return par.pol.ns(par.mesh, *lead, None, all_axes, *rest,
+                                  on_host=on_host)
+            return par.pol.ns(par.mesh, on_host=on_host)
 
         cshard = jax.tree_util.tree_map_with_path(host_spec, arg_specs["cache"])
     ishard = SH.batch_shardings(cfg, par, arg_specs["inp"])
@@ -114,11 +118,11 @@ def build(cfg: ModelConfig, par: ParallelContext, shape: ShapeConfig,
     def serve_step(cache, inp, pos, params):
         logits, cache = SV.decode_step(cfg, par, params, cache, inp, pos,
                                        n_host_chunks=n_host_chunks)
-        if n_host_chunks:
+        if n_host_chunks and par.offload_active:
             # re-offload the updated cache with an *internal* device_put
             # (out_shardings memory kinds are unsupported for SPMD outputs)
             cache = jax.tree.map(
-                lambda x, sh: jax.device_put(
+                lambda x, sh: par.pol.put(
                     jax.lax.with_sharding_constraint(
                         x, NamedSharding(par.mesh, sh.spec)), sh),
                 cache, cshard,

@@ -48,6 +48,7 @@ def main():
     from repro.data.pipeline import CheckpointableIterator, make_batch_fn
     from repro.models import transformer as T
     from repro.optim import adamw
+    from repro.runtime.placement import default_policy
     from repro.runtime.train_loop import TrainConfig, TrainLoop, make_train_step
 
     cfg = get_config(args.arch)
@@ -63,13 +64,15 @@ def main():
     if over:
         cfg = dataclasses.replace(cfg, **over)
 
+    pol = default_policy()  # probe the backend's memory kinds once
     par = None
     mesh_cm = None
     if args.mesh == "host8":
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_compat_mesh
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
-        par = ParallelContext(mesh=mesh, dp_axes=("data",), attn_impl="pallas")
+        mesh = make_compat_mesh((2, 4), ("data", "model"))
+        par = ParallelContext(mesh=mesh, dp_axes=("data",), attn_impl="pallas",
+                              placement=pol)
         mesh_cm = mesh
 
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -94,7 +97,7 @@ def main():
             print(f"[resume] restored step {step}")
 
     def put(b):
-        return {k: jnp.asarray(v) for k, v in b.items()}
+        return {k: pol.put(jnp.asarray(v)) for k, v in b.items()}
 
     loop = TrainLoop(cfg, par, oc, tc, step_fn, data, mgr)
     ctx = mesh_cm if mesh_cm is not None else _null()

@@ -8,8 +8,9 @@ Cache layouts (stacked over layer cycles C so decode scans one cycle body):
 
 Sharding: Ulysses archs shard cache *heads* over the model axis; CP archs
 shard cache *sequence*; SSM/RG states shard channels.  ``fpdt_offload``
-additionally keeps attention KV caches in pinned_host memory and streams
-them chunk-by-chunk through the online-softmax merge at decode time — the
+additionally keeps attention KV caches in host memory (when the backend's
+placement policy supports it) and streams them chunk-by-chunk through the
+online-softmax merge at decode time with explicit double buffering — the
 FPDT pipeline applied to inference (the EXTRA long_500k cell).
 """
 from __future__ import annotations
@@ -32,6 +33,7 @@ from repro.models.transformer import (
     layout_of,
     pattern_of,
 )
+from repro.runtime.placement import double_buffered
 
 Params = Dict[str, Any]
 
@@ -171,14 +173,20 @@ def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Param
             all_axes = tuple(par.mesh.axis_names)
             if cs % par.mesh.size == 0:
                 slab_spec = (None, all_axes, None, None)
-        state = zero_state((b, cfg.num_heads, 1, cfg.head_dim))
-        for c in range(n_host_chunks):
+
+        def fetch(c):
             kc = jax.lax.slice_in_dim(ck, c * cs, (c + 1) * cs, axis=1)
             vc = jax.lax.slice_in_dim(cv, c * cs, (c + 1) * cs, axis=1)
             kp = jax.lax.slice_in_dim(kpos, c * cs, (c + 1) * cs, axis=1)
             if par is not None:
                 kc = par.to_device(kc, *(slab_spec or ()))
                 vc = par.to_device(vc, *(slab_spec or ()))
+            return kc, vc, kp
+
+        state = zero_state((b, cfg.num_heads, 1, cfg.head_dim))
+        # chunk c+1's host->device fetch is issued before chunk c's merge
+        # (explicit double buffering, same pipeline as training FPDT)
+        for kc, vc, kp in double_buffered(range(n_host_chunks), fetch):
             state = merge(state, attend(kc, vc, kp))
         o = finalize(state)[:, :, 0]  # [b, h, d]
     else:
@@ -186,7 +194,7 @@ def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Param
     o = o.reshape(b, 1, cfg.q_dim).astype(x.dtype)
     out = o @ p["wo"]
     # NOTE: host residency of the updated cache comes from serve_step's
-    # out_shardings (memory_kind=pinned_host) — no explicit put needed.
+    # re-offload put through the placement policy — nothing explicit here.
     new_cache = {"k": ck, "v": cv, "kpos": kpos}
     return out, new_cache
 

@@ -25,6 +25,7 @@ from repro.models import layers as L
 from repro.models import mamba as M
 from repro.models import moe as MOE
 from repro.models import rglru as R
+from repro.runtime import placement
 
 Params = Dict[str, Any]
 
@@ -151,17 +152,14 @@ def block_apply(cfg: ModelConfig, par: Optional[ParallelContext], kind: str,
     raise ValueError(kind)
 
 
-def _remat_policy(cfg: ModelConfig):
+def _remat_policy(cfg: ModelConfig, par: Optional[ParallelContext] = None):
     if cfg.remat == "none":
         return None
     if cfg.remat == "offload":
-        pol = jax.checkpoint_policies.save_and_offload_only_these_names(
-            names_which_can_be_saved=[],
-            names_which_can_be_offloaded=["block_in"],
-            offload_src="device",
-            offload_dst="pinned_host",
-        )
-        return pol
+        # memory kinds come from the placement layer; on backends with no
+        # host pool this degrades to full remat (nothing saveable)
+        pol = par.pol if par is not None else placement.default_policy()
+        return pol.remat_policy(offload_names=["block_in"])
     return jax.checkpoint_policies.nothing_saveable
 
 
@@ -185,7 +183,7 @@ def hidden_forward(cfg: ModelConfig, par: Optional[ParallelContext],
 
     body = cycle_body
     if cfg.remat != "none":
-        body = jax.checkpoint(cycle_body, policy=_remat_policy(cfg),
+        body = jax.checkpoint(cycle_body, policy=_remat_policy(cfg, par),
                               prevent_cse=False)
     if cfg.scan_layers:
         (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0)), params["cycles"])

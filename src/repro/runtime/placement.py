@@ -1,0 +1,212 @@
+"""Backend-aware memory placement: the single audited layer for every
+device/host residency decision in the codebase.
+
+The paper's memory headroom comes from offloading idle KV/query chunks to
+host memory and double-buffering the fetch so it hides behind chunk compute
+(FPDT Fig. 6-7).  Whether that is *possible* — and which memory-kind strings
+name the two pools — is a backend property:
+
+  backend   | memory kinds advertised          | offload
+  ----------|----------------------------------|---------------------------
+  TPU       | ``device``, ``pinned_host``      | supported
+  GPU       | ``device``, ``pinned_host``      | supported
+  CPU       | ``unpinned_host`` (default only) | no distinct pool -> no-op
+
+The seed hardcoded ``memory_kind="device"/"pinned_host"`` at every call
+site, which crashes with ``ValueError: Could not find memory addressable by
+device cpu`` anywhere the backend doesn't advertise those kinds.
+``PlacementPolicy`` probes the backend once (``device.addressable_memories()``
+/ ``device.default_memory()``), records the compute and offload memory
+kinds, and degrades gracefully: on a backend with no distinct host pool,
+``to_host``/``to_device`` are identity functions and a warning is logged
+once, so the FPDT pipeline runs the same program on CPU, GPU, and TPU.
+
+All ``jax.device_put`` / ``memory_kind`` decisions route through this
+module (enforced: ``grep -rn 'memory_kind=' src/ | grep -v placement``
+must return nothing).  See ``docs/placement.md`` for the support matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+from typing import Any, Callable, Iterable, Iterator, Optional, Sequence, TypeVar
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+# The memory-kind names backends advertise for the two pools the FPDT
+# schedule cares about (compute-resident vs. offloaded-idle).
+HOST_MEMORY_KIND = "pinned_host"
+
+_WARNED: set = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _WARNED:
+        _WARNED.add(key)
+        log.warning(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPolicy:
+    """Immutable record of one backend's memory capabilities.
+
+    Frozen + hashable on purpose: it rides inside ``ParallelContext``,
+    which keys the per-config ``lru_cache`` of compiled FPDT pipelines.
+
+    ``device_kind``   — the backend's default (compute) memory kind.
+    ``host_kind``     — the offload pool, or ``None`` when the backend has
+                        no host pool distinct from its default memory.
+    ``offload_enabled`` — operator switch; ``False`` forces no-op placement
+                        even on capable backends (the dry-run uses this).
+    """
+
+    device_kind: Optional[str] = None
+    host_kind: Optional[str] = None
+    backend: str = "unknown"
+    offload_enabled: bool = True
+
+    # -- capability probe ------------------------------------------------
+    @classmethod
+    def probe(cls, device: Optional[Any] = None, *,
+              offload_enabled: bool = True) -> "PlacementPolicy":
+        """Inspect one device's memory spaces (once; result is immutable)."""
+        if device is None:
+            device = jax.devices()[0]
+        try:
+            kinds = {m.kind for m in device.addressable_memories()}
+        except Exception:  # very old jax: no memories API at all
+            kinds = set()
+        try:
+            default = device.default_memory().kind
+        except Exception:
+            default = None
+        host = HOST_MEMORY_KIND if HOST_MEMORY_KIND in kinds else None
+        if host is not None and host == default:
+            # a "host" pool that IS the default memory is not an offload
+            # target (there is nowhere to offload *from*)
+            host = None
+        return cls(device_kind=default, host_kind=host,
+                   backend=getattr(device, "platform", "unknown"),
+                   offload_enabled=offload_enabled)
+
+    # -- capabilities ----------------------------------------------------
+    @property
+    def supports_pinned_host(self) -> bool:
+        """Backend advertises a pinned-host pool distinct from compute memory."""
+        return self.host_kind is not None
+
+    @property
+    def can_offload(self) -> bool:
+        """Offload is both possible (backend) and enabled (operator)."""
+        return self.offload_enabled and self.supports_pinned_host
+
+    def _noop(self, verb: str):
+        _warn_once(
+            f"{self.backend}:{verb}",
+            f"[placement] {verb} requested but backend '{self.backend}' has "
+            f"no '{HOST_MEMORY_KIND}' memory distinct from its default "
+            f"('{self.device_kind}'); offload degrades to a no-op.",
+        )
+
+    # -- sharding construction ------------------------------------------
+    def ns(self, mesh: Optional[Mesh], *spec, on_host: bool = False
+           ) -> Optional[NamedSharding]:
+        """NamedSharding over ``mesh`` with the policy's memory kind.
+
+        ``on_host=True`` targets the offload pool when supported and
+        silently falls back to a plain (default-memory) sharding when not —
+        callers never name a memory kind themselves.
+        """
+        if mesh is None:
+            return None
+        kw = {}
+        if self.can_offload:
+            kw["memory_kind"] = self.host_kind if on_host else self.device_kind
+        return NamedSharding(mesh, P(*spec), **kw)
+
+    def host_sharding(self, mesh: Optional[Mesh], *spec) -> Optional[NamedSharding]:
+        return self.ns(mesh, *spec, on_host=True)
+
+    def device_sharding(self, mesh: Optional[Mesh], *spec) -> Optional[NamedSharding]:
+        return self.ns(mesh, *spec, on_host=False)
+
+    def _single(self, on_host: bool):
+        kind = self.host_kind if on_host else self.device_kind
+        return jax.sharding.SingleDeviceSharding(
+            jax.devices()[0], **({"memory_kind": kind} if kind else {}))
+
+    # -- placement ops ---------------------------------------------------
+    def to_host(self, x, mesh: Optional[Mesh] = None,
+                spec: Sequence = ()):  # noqa: ANN001 - jax array/tracer
+        """Move ``x`` to the offload pool; identity on incapable backends."""
+        if not self.can_offload:
+            self._noop("to_host")
+            return x
+        s = self._single(True) if mesh is None else self.host_sharding(mesh, *spec)
+        return jax.device_put(x, s)
+
+    def to_device(self, x, mesh: Optional[Mesh] = None, spec: Sequence = ()):
+        """Fetch ``x`` back into compute memory; identity when no offload."""
+        if not self.can_offload:
+            self._noop("to_device")
+            return x
+        s = self._single(False) if mesh is None else self.device_sharding(mesh, *spec)
+        return jax.device_put(x, s)
+
+    def put(self, x, sharding=None):
+        """Audited passthrough for plain (default-memory) ``device_put`` —
+        checkpoint restore, batch staging.  Never names a memory kind."""
+        return jax.device_put(x, sharding) if sharding is not None else jax.device_put(x)
+
+    # -- remat offload ---------------------------------------------------
+    def remat_policy(self, offload_names: Sequence[str] = ("block_in",)):
+        """Checkpoint policy for ``remat='offload'``: offload the named
+        residuals to the host pool, falling back to full remat (save
+        nothing) when the backend can't host-offload."""
+        if not self.can_offload:
+            self._noop("remat-offload")
+            return jax.checkpoint_policies.nothing_saveable
+        return jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=list(offload_names),
+            offload_src=self.device_kind or "device",
+            offload_dst=self.host_kind,
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def default_policy(offload_enabled: bool = True) -> PlacementPolicy:
+    """The process-wide policy for the default backend (probed once)."""
+    return PlacementPolicy.probe(offload_enabled=offload_enabled)
+
+
+# ---------------------------------------------------------------------------
+# explicit double buffering
+# ---------------------------------------------------------------------------
+
+T = TypeVar("T")
+U = TypeVar("U")
+
+
+def double_buffered(items: Iterable[T], fetch: Callable[[T], U]) -> Iterator[U]:
+    """Two-deep prefetch pipeline over ``items`` (FPDT Fig. 6).
+
+    Yields ``fetch(item_k)`` with the guarantee that ``fetch(item_{k+1})``
+    has already been *issued* before the consumer runs compute on item k:
+    the fetch (a ``device_put`` copy-start on offload-capable backends)
+    precedes the chunk kernel in program order, so the host->device copy
+    overlaps chunk compute explicitly instead of relying on XLA to discover
+    the independence.
+    """
+    seq = list(items)
+    if not seq:
+        return
+    ahead = fetch(seq[0])
+    for k in range(len(seq)):
+        cur = ahead
+        ahead = fetch(seq[k + 1]) if k + 1 < len(seq) else None
+        yield cur

@@ -25,6 +25,7 @@ from repro.core.parallel import ParallelContext
 from repro.models import transformer as T
 from repro.optim import adamw
 from repro.optim import compression as comp
+from repro.runtime import placement
 
 
 @dataclasses.dataclass
@@ -137,13 +138,16 @@ class TrainLoop:
 
     def run(self, params, opt_state, start_step: int = 0, put_batch=None):
         self._install_signals()
+        if put_batch is None:
+            # default batch staging routes through the placement layer
+            pol = self.par.pol if self.par is not None else placement.default_policy()
+            put_batch = lambda b: {k: pol.put(jnp.asarray(v)) for k, v in b.items()}  # noqa: E731
         step = start_step
         self.data.restore(start_step)
         while step < self.tc.steps and not self._stop:
             t0 = time.perf_counter()
             batch = next(self.data)
-            if put_batch is not None:
-                batch = put_batch(batch)
+            batch = put_batch(batch)
             params, opt_state, metrics = self.step_fn(params, opt_state, batch)[:3]
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0

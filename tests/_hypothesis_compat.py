@@ -1,0 +1,80 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The property-test modules import ``given/settings/strategies`` through this
+shim; with real hypothesis available they get the real thing, otherwise a
+deterministic fallback runs each test over a small fixed grid of example
+values (the cartesian product of per-strategy samples, capped).  That keeps
+the invariant tests *running* — not skipped — on minimal containers, while
+real hypothesis still fuzzes them where it exists.
+"""
+import functools
+import inspect
+import itertools
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _MAX_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            span = max_value - min_value
+            picks = {min_value, max_value, min_value + span // 2,
+                     min_value + span // 3, min_value + (2 * span) // 3}
+            return _Strategy(sorted(picks))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            mid = 0.5 * (min_value + max_value)
+            return _Strategy([min_value, mid, max_value])
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(list(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+    strategies = _Strategies()
+
+    def settings(max_examples=None, **_kw):
+        def deco(fn):
+            fn._he_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                # settings() is the OUTER decorator in the test modules, so
+                # the cap lands on this wrapper — check it first
+                cap = (getattr(runner, "_he_max_examples", None)
+                       or getattr(fn, "_he_max_examples", None) or _MAX_EXAMPLES)
+                names = list(strats)
+                grids = [strats[n].samples for n in names]
+                for k, combo in enumerate(itertools.product(*grids)):
+                    if k >= cap:
+                        break
+                    fn(*args, **dict(kwargs, **dict(zip(names, combo))))
+
+            # hide the strategy-filled params from pytest's fixture resolver
+            sig = inspect.signature(fn)
+            runner.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strats
+            ])
+            return runner
+
+        return deco

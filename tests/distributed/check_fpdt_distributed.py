@@ -19,12 +19,13 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 from repro.configs import get_config, reduced
 from repro.core.parallel import ParallelContext
+from repro.launch.mesh import make_compat_mesh
 from repro.models import transformer as T
 
 
@@ -60,7 +61,7 @@ def check(name, u, offload, heads=None, kv_heads=None, tol=2e-3):
     cfg0 = dataclasses.replace(cfg, fpdt_chunks=1, fpdt_offload=False)
     (l0, _), g0 = jax.value_and_grad(lambda p: T.loss_fn(cfg0, None, p, batch), has_aux=True)(params)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((2, 4), ("data", "model"))
     par = ParallelContext(mesh=mesh, dp_axes=("data",), attn_impl="pallas")
     with mesh:
         jf = jax.jit(jax.value_and_grad(lambda p, b_: T.loss_fn(cfg, par, p, b_), has_aux=True))

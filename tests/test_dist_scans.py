@@ -1,9 +1,12 @@
-"""Sequence-parallel scan algorithms (§Perf A2/A3) vs their serial oracles."""
+"""Sequence-parallel scan algorithms (§Perf A2/A3) vs their serial oracles.
+Property tests run on a fixed-seed grid when hypothesis isn't installed
+(see tests/_hypothesis_compat.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.linear_scan import ref as LSR
 from repro.models import mamba as M

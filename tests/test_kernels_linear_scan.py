@@ -1,9 +1,11 @@
-"""Linear-scan kernel vs naive recurrence + property tests."""
+"""Linear-scan kernel vs naive recurrence + property tests (fixed-seed grid
+when hypothesis isn't installed; see tests/_hypothesis_compat.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.linear_scan import ops as O
 from repro.kernels.linear_scan import ref as R

@@ -1,8 +1,10 @@
 """Property tests (hypothesis) for the online-softmax merge — the invariant
-the whole FPDT schedule rests on."""
+the whole FPDT schedule rests on.  Falls back to a fixed-seed grid when
+hypothesis isn't installed (see tests/_hypothesis_compat.py)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.online_softmax import SoftmaxState, finalize, merge, zero_state
 from repro.kernels.flash_attention import ref as R

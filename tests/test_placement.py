@@ -1,0 +1,156 @@
+"""PlacementPolicy: capability probing, graceful no-op degradation, spec
+pass-through with a mesh, and the FPDT offload regression on a host with no
+pinned memory (the seed crashed here with ValueError)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import fpdt
+from repro.core.parallel import ParallelContext
+from repro.models import layers as L
+from repro.runtime.placement import (
+    PlacementPolicy,
+    default_policy,
+    double_buffered,
+)
+
+
+# ---------------------------------------------------------------------------
+# capability probing
+# ---------------------------------------------------------------------------
+
+
+def test_probe_cpu_backend():
+    pol = PlacementPolicy.probe(jax.devices()[0])
+    assert pol.backend == jax.devices()[0].platform
+    assert pol.device_kind == jax.devices()[0].default_memory().kind
+    kinds = {m.kind for m in jax.devices()[0].addressable_memories()}
+    # on this CPU-only container there is no pinned_host pool
+    if "pinned_host" not in kinds:
+        assert not pol.supports_pinned_host
+        assert not pol.can_offload
+
+
+def test_default_policy_probes_once():
+    assert default_policy() is default_policy()
+
+
+def test_host_pool_equal_to_default_is_not_offload():
+    # a "host" pool that IS the default memory is not an offload target
+    pol = PlacementPolicy(device_kind="pinned_host", host_kind=None)
+    assert not pol.can_offload
+    pol2 = PlacementPolicy(device_kind="device", host_kind="pinned_host")
+    assert pol2.supports_pinned_host and pol2.can_offload
+    assert not dataclasses.replace(pol2, offload_enabled=False).can_offload
+
+
+# ---------------------------------------------------------------------------
+# no-op degradation
+# ---------------------------------------------------------------------------
+
+
+def test_noop_degradation_without_host_pool():
+    pol = PlacementPolicy(device_kind="unpinned_host", host_kind=None,
+                          backend="cpu")
+    x = jnp.arange(8.0)
+    assert pol.to_host(x) is x
+    assert pol.to_device(x) is x
+
+
+def test_noop_logs_warning_once(caplog):
+    pol = PlacementPolicy(device_kind="unpinned_host", host_kind=None,
+                          backend="test-warn-backend")
+    x = jnp.arange(4.0)
+    with caplog.at_level("WARNING", logger="repro.runtime.placement"):
+        pol.to_host(x)
+        pol.to_host(x)
+    hits = [r for r in caplog.records if "test-warn-backend" in r.message]
+    assert len(hits) == 1  # warn once, not per chunk
+
+
+def test_remat_policy_degrades_to_full_remat():
+    pol = PlacementPolicy(device_kind="unpinned_host", host_kind=None)
+    assert pol.remat_policy() is jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# spec pass-through with a mesh
+# ---------------------------------------------------------------------------
+
+
+def test_sharding_spec_passthrough_with_mesh():
+    from repro.launch.mesh import make_compat_mesh
+
+    mesh = make_compat_mesh((1,), ("data",))
+    pol = default_policy()
+    s = pol.host_sharding(mesh, "data", None)
+    assert s is not None and s.mesh is mesh
+    assert s.spec == jax.sharding.PartitionSpec("data", None)
+    if not pol.can_offload:  # degraded: plain default-memory sharding
+        x = jnp.ones((2, 3))
+        y = jax.device_put(x, s)  # must be constructible and usable
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+    assert pol.ns(None) is None  # mesh-less spec degrades to None
+
+
+def test_parallel_context_routes_through_policy():
+    par = ParallelContext(mesh=None)
+    x = jnp.arange(6.0).reshape(2, 3)
+    hx = par.to_host(x)
+    dx = par.to_device(hx)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(x))
+    if not par.pol.can_offload:
+        assert not par.offload_active
+    # offload disabled at the context level short-circuits entirely
+    par_off = ParallelContext(mesh=None, offload_to_host=False)
+    assert par_off.to_host(x) is x
+
+
+# ---------------------------------------------------------------------------
+# explicit double buffering
+# ---------------------------------------------------------------------------
+
+
+def test_double_buffered_prefetches_one_ahead():
+    events = []
+
+    def fetch(k):
+        events.append(("fetch", k))
+        return k
+
+    for k in double_buffered(range(4), fetch):
+        events.append(("compute", k))
+    # fetch of k+1 must be issued before compute of k
+    assert events == [
+        ("fetch", 0), ("fetch", 1), ("compute", 0), ("fetch", 2),
+        ("compute", 1), ("fetch", 3), ("compute", 2), ("compute", 3),
+    ]
+    assert list(double_buffered([], fetch)) == []
+
+
+# ---------------------------------------------------------------------------
+# regression: FPDT offload on a host without pinned memory == u=1 baseline
+# ---------------------------------------------------------------------------
+
+
+def test_fpdt_offload_matches_baseline_without_pinned_memory():
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-1b")),
+                              param_dtype="float32", block_q=16, block_k=16)
+    key = jax.random.PRNGKey(0)
+    p = L.init_attn(cfg, key, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, cfg.d_model),
+                          jnp.float32)
+
+    def run(u, offload):
+        c = dataclasses.replace(cfg, fpdt_chunks=u, fpdt_offload=offload)
+        par = ParallelContext(mesh=None, attn_impl="pallas")
+        return fpdt.fpdt_attention(c, par, p, x, kind="local")
+
+    o1 = run(1, False)
+    o4 = run(4, True)  # seed: ValueError before any math on this backend
+    np.testing.assert_allclose(np.asarray(o4), np.asarray(o1),
+                               rtol=2e-4, atol=2e-4)
