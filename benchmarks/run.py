@@ -22,6 +22,7 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=None)
     args = ap.parse_args()
 
+    from benchmarks import compile_scaling
     from benchmarks import kernels_bench
     from benchmarks import paper_tables as PT
 
@@ -33,6 +34,7 @@ def main() -> None:
         "table3": PT.table3_strategies,
         "table4": PT.table4_sparse,
         "kernels": kernels_bench.run,
+        "compile_scaling": compile_scaling.run,
     }
     sel = args.only or list(suites)
     failures = 0

@@ -13,13 +13,35 @@ One implementation covers both the paper's baseline and its contribution:
                      across KV chunks j <= i, and idle KV chunks are
                      offloaded to host memory and fetched back chunk-by-chunk
                      with *explicit* double buffering: the fetch of chunk
-                     j+1 is issued before the chunk-j kernel (see
-                     ``runtime.placement.double_buffered``), so the async
+                     j+1 is issued before the chunk-j kernel, so the async
                      copy-start/copy-done pair overlaps chunk compute by
                      program order.  All residency decisions route through
                      ``runtime.placement.PlacementPolicy`` — on a backend
                      with no pinned-host pool (e.g. CPU) offload degrades
                      to a no-op and the pipeline still matches u=1 exactly.
+
+Two compilation strategies for the u>1 pipeline:
+
+  * scan-compiled (default) — the forward is one ``lax.scan`` over query
+    chunks whose carry holds the KV store as preallocated
+    ``[u, b, h, cq, dh]`` buffers (``dynamic_update_slice`` on append,
+    ``dynamic_slice`` + placement-routed fetch on read); the inner KV loop
+    and the Fig. 7 backward's nested loops are ``fori_loop``s with *traced*
+    chunk offsets (the flash kernels take offsets as scalar-prefetch
+    operands), and ``pair_live`` is a traced predicate gating each pair
+    with ``lax.cond`` — window/sparsity chunk skipping skips compute *and*
+    host traffic inside the compiled loop.  HLO size is O(1) in u, so
+    u=32/u=64 schedules (the path to the paper's 2M-token setting) trace
+    and compile in near-constant time (see benchmarks/compile_scaling.py).
+  * unrolled (``cfg.fpdt_unroll=True``) — the original Python-unrolled
+    O(u^2) double loop.  Kept as a differential-testing oracle
+    (tests/test_fpdt_scan.py) and for roofline probes that want per-pair
+    HLO costs; impractical beyond toy u (quadratic HLO growth).
+
+Double buffering in the scan path carries the prefetched chunk in the loop
+state (``runtime.placement.fori_double_buffered``): the fetch of chunk j+1
+is issued before chunk j's kernels in program order, exactly like the
+generator-based schedule of the unrolled path.
 
 Backward is a custom VJP implementing the paper's Fig. 7 nested loop:
 outer loop over KV chunks j, inner loop over query chunks i >= j, using the
@@ -46,11 +68,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
-from repro.core.online_softmax import SoftmaxState, finalize, lse
+from repro.core.online_softmax import SoftmaxState, finalize, lse, zero_state_like
 from repro.core.parallel import ParallelContext
 from repro.kernels.flash_attention import ops as fa
 from repro.models.layers import apply_rope, qkv_proj
-from repro.runtime.placement import double_buffered
+from repro.runtime.placement import double_buffered, fori_double_buffered
 
 Params = Dict[str, Any]
 
@@ -67,6 +89,14 @@ def _shard_q(par: ParallelContext, kind: str, q: jnp.ndarray) -> jnp.ndarray:
     if kind == "ulysses":
         return par.head_sharded(q)  # seq gathered, heads scattered (a2a)
     return par.constrain(q, par.dp_axes, par.sp_axis, None, None)  # cp: seq stays
+
+def _shard_q_stacked(par: ParallelContext, kind: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Chunk-stacked [u, b, s, h, d] variant of ``_shard_q``."""
+    if par.mesh is None or kind == "local":
+        return x
+    if kind == "ulysses":
+        return par.constrain(x, None, par.dp_axes, None, par.sp_axis, None)
+    return par.constrain(x, None, par.dp_axes, par.sp_axis, None, None)
 
 
 def _shard_kv(par: ParallelContext, kind: str, x: jnp.ndarray) -> jnp.ndarray:
@@ -99,6 +129,49 @@ def _host_spec_kv(par: ParallelContext, kind: str, n_heads: int, chunk_len: int)
 
 
 # ---------------------------------------------------------------------------
+# chunk-pair liveness (window band / block sparsity)
+# ---------------------------------------------------------------------------
+
+
+def sparsity_stride(sparsity: float) -> int:
+    """Distance stride keeping ~(1-sparsity) of off-diagonal KV chunks."""
+    return max(1, round(1.0 / max(1e-9, 1.0 - sparsity)))
+
+
+def pair_live(i: int, j: int, *, cq: int, window: int, sparsity: float) -> bool:
+    """Is the (query chunk i, KV chunk j) pair attended?  Static indices
+    (unrolled path / tests); ``pair_live_traced`` is the loop twin."""
+    if j > i:
+        return False
+    if window and (i - j) * cq >= window + cq - 1:
+        return False  # chunk pair fully outside the attention band
+    if sparsity > 0.0 and j < i:
+        # block-sparse (paper §5.6): keep ~(1-sparsity) of off-diagonal
+        # KV chunks by distance stride; the diagonal is always attended.
+        # Fewer KV chunks are fetched from host — the paper's Table 4.
+        if (i - j - 1) % sparsity_stride(sparsity) != 0:
+            return False
+    return True
+
+
+def pair_live_traced(i, j, *, cq: int, window: int, sparsity: float):
+    """Traced-predicate twin of ``pair_live`` (i/j may be int tracers).
+
+    window/sparsity/cq stay trace-time constants — only the chunk indices
+    are dynamic, so the compiled loop body carries one boolean that gates
+    the pair's kernels and fetches with ``lax.cond``.
+    """
+    i = jnp.asarray(i, jnp.int32)
+    j = jnp.asarray(j, jnp.int32)
+    liv = j <= i
+    if window:
+        liv &= (i - j) * cq < window + cq - 1
+    if sparsity > 0.0:
+        liv &= (j == i) | ((i - j - 1) % sparsity_stride(sparsity) == 0)
+    return liv
+
+
+# ---------------------------------------------------------------------------
 # the chunk pipeline (forward + Fig.7 backward), cached per static config
 # ---------------------------------------------------------------------------
 
@@ -114,6 +187,9 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
     bq, bk = cfg.block_q, cfg.block_k
     assert seq_len % u == 0, (seq_len, u)
     cq = seq_len // u
+    # u=1 has no chunk loop to compile — the unrolled builder IS the plain
+    # Ulysses/CP baseline there, so the scan machinery only engages for u>1.
+    unroll = cfg.fpdt_unroll or u == 1
     # Offload *requested*: capability degradation (no pinned-host pool ->
     # identity + one logged warning) happens inside the placement policy.
     do_offload = offload and par.offload_to_host and u > 1
@@ -121,9 +197,9 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
     q_spec = _host_spec_kv(par, kind, hq, seq_len // u)
 
     def project(p, xi, i):
-        b = xi.shape[0]
+        """(q, k, v) of hidden chunk i in head layout; i may be traced."""
         q, k, v = qkv_proj(cfg, p, xi)  # [b, cq, h, dh]
-        pos = jnp.arange(i * cq + pos_offset, i * cq + cq + pos_offset)
+        pos = jnp.asarray(i, jnp.int32) * cq + pos_offset + jnp.arange(cq)
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
         if rep > 1:
@@ -136,23 +212,13 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
         return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
 
     def unrope_back(g, i):
-        """Backward of rope: rotate by -theta (orthogonal map)."""
-        pos = -jnp.arange(i * cq + pos_offset, i * cq + cq + pos_offset)
+        """Backward of rope: rotate by -theta (orthogonal map); traced i ok."""
+        pos = -(jnp.asarray(i, jnp.int32) * cq + pos_offset + jnp.arange(cq))
         return apply_rope(g, pos, cfg.rope_theta)
 
-    def pair_live(i, j):
-        if j > i:
-            return False
-        if window and (i - j) * cq >= window + cq - 1:
-            return False  # chunk pair fully outside the attention band
-        if sparsity > 0.0 and j < i:
-            # block-sparse (paper §5.6): keep ~(1-sparsity) of off-diagonal
-            # KV chunks by distance stride; the diagonal is always attended.
-            # Fewer KV chunks are fetched from host — the paper's Table 4.
-            stride = max(1, round(1.0 / max(1e-9, 1.0 - sparsity)))
-            if (i - j - 1) % stride != 0:
-                return False
-        return True
+    live_py = functools.partial(pair_live, cq=cq, window=window, sparsity=sparsity)
+    live_tr = functools.partial(pair_live_traced, cq=cq, window=window,
+                                sparsity=sparsity)
 
     def to_host(t, spec=None):
         return par.to_host(t, *(spec or kv_spec)) if do_offload else t
@@ -160,8 +226,17 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
     def to_dev(t, spec=None):
         return par.to_device(t, *(spec or kv_spec)) if do_offload else t
 
-    # ---------------- forward ----------------
-    def fwd(x, p):
+    # chunk-stacked [u, ...] stores: the leading chunk axis never shards
+    kv_store_spec = (None,) + kv_spec
+    q_store_spec = (None,) + q_spec
+
+    def pair_kwargs(i, j):
+        return dict(causal=True, window=window, q_offset=i * cq, k_offset=j * cq,
+                    block_q=bq, block_k=bk, impl=impl)
+
+    # ================= unrolled path (fpdt_unroll / u == 1) =================
+
+    def fwd_unrolled(x, p):
         b = x.shape[0]
         kv_store = []  # (k_j, v_j) in head layout, offloaded when idle
         outs, Ls, res_q, res_o = [], [], [], []
@@ -172,23 +247,15 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
             # Explicit double buffering (Fig. 6): the fetch of KV chunk j+1
             # is issued before the chunk-j kernel, so the host->device copy
             # overlaps compute by program order, not XLA scheduling luck.
-            live = [j for j in range(i) if pair_live(i, j)]
+            live = [j for j in range(i) if live_py(i, j)]
 
             def fetch_kv(j):
                 kj, vj = kv_store[j]
                 return to_dev(kj), to_dev(vj)
 
             for j, (kj, vj) in zip(live, double_buffered(live, fetch_kv)):
-                carry = fa.chunk_fwd(
-                    qi, kj, vj, carry, causal=True, window=window,
-                    q_offset=i * cq, k_offset=j * cq, block_q=bq, block_k=bk,
-                    impl=impl,
-                )
-            carry = fa.chunk_fwd(
-                qi, ki, vi, carry, causal=True, window=window,
-                q_offset=i * cq, k_offset=i * cq, block_q=bq, block_k=bk,
-                impl=impl,
-            )
+                carry = fa.chunk_fwd(qi, kj, vj, carry, **pair_kwargs(i, j))
+            carry = fa.chunk_fwd(qi, ki, vi, carry, **pair_kwargs(i, i))
             st = SoftmaxState(*carry)
             oi = finalize(st)  # [b, h, cq, dh] fp32
             Li = lse(st)
@@ -206,8 +273,7 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
             o = par.seq_sharded(o)
         return o, (x, p, kv_store, res_q, res_o, Ls)
 
-    # ---------------- backward: Fig. 7 nested loop ----------------
-    def bwd(res, do):
+    def bwd_unrolled(res, do):
         x, p, kv_store, res_q, res_o, Ls = res
         b = x.shape[0]
         # head-layout do + delta per chunk
@@ -235,62 +301,200 @@ def _make_fpdt(cfg: ModelConfig, par: ParallelContext, kind: str, window: int,
             return to_dev(res_q[i], q_spec)
 
         for j, (kj, vj) in zip(range(u), double_buffered(range(u), fetch_kv)):
-            inner = [i for i in range(j, u) if pair_live(i, j)]
+            inner = [i for i in range(j, u) if live_py(i, j)]
             for i, qi in zip(inner, double_buffered(inner, fetch_q)):
-                kwargs = dict(causal=True, window=window, q_offset=i * cq,
-                              k_offset=j * cq, block_q=bq, block_k=bk, impl=impl)
+                kwargs = pair_kwargs(i, j)
                 dk_c, dv_c = fa.chunk_bwd_dkv(qi, kj, vj, dos[i], Ls[i], deltas[i], **kwargs)
                 dq_c = fa.chunk_bwd_dq(qi, kj, vj, dos[i], Ls[i], deltas[i], **kwargs)
                 dks[j] = dk_c if dks[j] is None else dks[j] + dk_c
                 dvs[j] = dv_c if dvs[j] is None else dvs[j] + dv_c
                 dqs[i] = dq_c if dqs[i] is None else dqs[i] + dq_c
 
-        # per-chunk: a2a back, un-rope, un-project; accumulate dW
-        dx_chunks = []
-        dwq = dwk = dwv = None
-        dbq = dbk = dbv = None
+        # per-chunk: a2a back, un-rope, un-project; accumulate dW.  A chunk
+        # with no live pairs at all (reachable only under schedules that
+        # drop the diagonal) contributes exact-zero grads — note dq's zero
+        # has hq heads, NOT the kv-head count zkv carries.
+        zkv = jnp.zeros((b, hkv * rep, cq, dh), jnp.float32)
+        zq = jnp.zeros((b, hq, cq, dh), jnp.float32)
+        dq_stack = jnp.stack([dq if dq is not None else zq for dq in dqs])
+        dk_stack = jnp.stack([dk if dk is not None else zkv for dk in dks])
+        dv_stack = jnp.stack([dv if dv is not None else zkv for dv in dvs])
+        return _unproject_unrolled(x, p, dq_stack, dk_stack, dv_stack)
+
+    def _unproject_body(p, i, xi, dq, dk, dv, b):
+        """Shared per-chunk grad epilogue: a2a back, un-rope, un-project.
+        Returns (dx_i, dW contributions).  i may be traced (scan path)."""
+        dq = dq.astype(xi.dtype).transpose(0, 2, 1, 3)  # [b, cq, h, dh]
+        dk = dk.astype(xi.dtype).transpose(0, 2, 1, 3)
+        dv = dv.astype(xi.dtype).transpose(0, 2, 1, 3)
+        if par.mesh is not None and kind != "local":
+            dq = par.constrain(dq, par.dp_axes, par.sp_axis, None, None)
+            dk = par.constrain(dk, par.dp_axes, par.sp_axis, None, None)
+            dv = par.constrain(dv, par.dp_axes, par.sp_axis, None, None)
+        if rep > 1:  # sum grads of replicated KV heads
+            dk = dk.reshape(b, cq, hkv, rep, dh).sum(3)
+            dv = dv.reshape(b, cq, hkv, rep, dh).sum(3)
+        dq = unrope_back(dq, i)
+        dk = unrope_back(dk, i)
+        dqf = dq.reshape(b, cq, hq * dh)
+        dkf = dk.reshape(b, cq, hkv * dh)
+        dvf = dv.reshape(b, cq, hkv * dh)
+        dx = dqf @ p["wq"].T + dkf @ p["wk"].T + dvf @ p["wv"].T
+        contrib = {
+            "wq": jnp.einsum("bsd,bse->de", xi, dqf),
+            "wk": jnp.einsum("bsd,bse->de", xi, dkf),
+            "wv": jnp.einsum("bsd,bse->de", xi, dvf),
+        }
+        if cfg.qkv_bias:
+            contrib["bq"] = jnp.sum(dqf, axis=(0, 1))
+            contrib["bk"] = jnp.sum(dkf, axis=(0, 1))
+            contrib["bv"] = jnp.sum(dvf, axis=(0, 1))
+        return dx, contrib
+
+    def _unproject_unrolled(x, p, dq_stack, dk_stack, dv_stack):
+        b = x.shape[0]
+        dx_chunks, dp = [], None
         for i in range(u):
             xi = jax.lax.slice_in_dim(x, i * cq, (i + 1) * cq, axis=1)
-            dq = dqs[i].astype(x.dtype).transpose(0, 2, 1, 3)  # [b, cq, h, dh]
-            zkv = jnp.zeros((b, hkv * rep, cq, dh), x.dtype)
-            dk = (dks[i] if dks[i] is not None else zkv).astype(x.dtype).transpose(0, 2, 1, 3)
-            dv = (dvs[i] if dvs[i] is not None else zkv).astype(x.dtype).transpose(0, 2, 1, 3)
-            if par.mesh is not None and kind != "local":
-                dq = par.constrain(dq, par.dp_axes, par.sp_axis, None, None)
-                dk = par.constrain(dk, par.dp_axes, par.sp_axis, None, None)
-                dv = par.constrain(dv, par.dp_axes, par.sp_axis, None, None)
-            if rep > 1:  # sum grads of replicated KV heads
-                dk = dk.reshape(b, cq, hkv, rep, dh).sum(3)
-                dv = dv.reshape(b, cq, hkv, rep, dh).sum(3)
-            dq = unrope_back(dq, i)
-            dk = unrope_back(dk, i)
-            dqf = dq.reshape(b, cq, hq * dh)
-            dkf = dk.reshape(b, cq, hkv * dh)
-            dvf = dv.reshape(b, cq, hkv * dh)
-            dx = dqf @ p["wq"].T + dkf @ p["wk"].T + dvf @ p["wv"].T
+            dx, contrib = _unproject_body(p, i, xi, dq_stack[i], dk_stack[i],
+                                          dv_stack[i], b)
             dx_chunks.append(dx)
-            wq_c = jnp.einsum("bsd,bse->de", xi, dqf)
-            wk_c = jnp.einsum("bsd,bse->de", xi, dkf)
-            wv_c = jnp.einsum("bsd,bse->de", xi, dvf)
-            dwq = wq_c if dwq is None else dwq + wq_c
-            dwk = wk_c if dwk is None else dwk + wk_c
-            dwv = wv_c if dwv is None else dwv + wv_c
-            if cfg.qkv_bias:
-                bq_c = jnp.sum(dqf, axis=(0, 1))
-                bk_c = jnp.sum(dkf, axis=(0, 1))
-                bv_c = jnp.sum(dvf, axis=(0, 1))
-                dbq = bq_c if dbq is None else dbq + bq_c
-                dbk = bk_c if dbk is None else dbk + bk_c
-                dbv = bv_c if dbv is None else dbv + bv_c
-
+            dp = contrib if dp is None else jax.tree.map(jnp.add, dp, contrib)
         dx = jnp.concatenate(dx_chunks, axis=1)
         if par.mesh is not None:
             dx = par.seq_sharded(dx)
-        dp = {"wq": dwq, "wk": dwk, "wv": dwv}
-        if cfg.qkv_bias:
-            dp.update({"bq": dbq, "bk": dbk, "bv": dbv})
         # wo is not part of this custom_vjp (out_proj applied by caller)
         return dx, dp
+
+    # ================= scan-compiled path (default for u > 1) ===============
+    #
+    # One lax.scan over query chunks; the KV store is a pair of preallocated
+    # [u, b, h, cq, dh] carry buffers living in the offload pool
+    # (placement-annotated after every append), appended with
+    # dynamic_update_slice and read back chunk-by-chunk through the
+    # double-buffered fori_loop.  HLO contains ONE copy of the chunk body.
+
+    def _store_kv(store, chunk, i):
+        store = jax.lax.dynamic_update_index_in_dim(store, chunk, i, axis=0)
+        return to_host(store, kv_store_spec)
+
+    def _load(store, j, spec):
+        return to_dev(jax.lax.dynamic_index_in_dim(store, j, axis=0,
+                                                   keepdims=False), spec)
+
+    def fwd_scan(x, p):
+        b = x.shape[0]
+        xs = x.reshape(b, u, cq, -1).swapaxes(0, 1)  # [u, b, cq, d]
+        proj_dtype = jnp.result_type(x.dtype, p["wq"].dtype)
+        # stores start in the offload pool so the scan carry's memory
+        # placement agrees between loop entry and the to_host'd body outputs
+        kst0 = to_host(jnp.zeros((u, b, hkv * rep, cq, dh), proj_dtype),
+                       kv_store_spec)
+        vst0 = to_host(jnp.zeros((u, b, hkv * rep, cq, dh), proj_dtype),
+                       kv_store_spec)
+        qst0 = to_host(jnp.zeros((u, b, hq, cq, dh), proj_dtype), q_store_spec)
+
+        def body(carry, inp):
+            kst, vst, qst = carry
+            i, xi = inp
+            qi, ki, vi = project(p, xi, i)
+
+            def fetch_kv(j):
+                return _load(kst, j, kv_spec), _load(vst, j, kv_spec)
+
+            def pair(j, kv, st):
+                kj, vj = kv
+                return tuple(fa.chunk_fwd(qi, kj, vj, tuple(st), **pair_kwargs(i, j)))
+
+            st = fori_double_buffered(
+                0, i, fetch_kv, pair, tuple(zero_state_like(qi)),
+                live=lambda j: live_tr(i, j))
+            st = SoftmaxState(*fa.chunk_fwd(qi, ki, vi, st, **pair_kwargs(i, i)))
+            oi = finalize(st)  # [b, hq, cq, dh] fp32
+            Li = lse(st)
+            kst = _store_kv(kst, ki, i)
+            vst = _store_kv(vst, vi, i)
+            qst = to_host(jax.lax.dynamic_update_index_in_dim(qst, qi, i, axis=0),
+                          q_store_spec)
+            # back to token layout + seq sharding (inverse all-to-all)
+            ot = oi.astype(x.dtype).transpose(0, 2, 1, 3)  # [b, cq, hq, dh]
+            if par.mesh is not None and kind != "local":
+                ot = par.constrain(ot, par.dp_axes, par.sp_axis, None, None)
+            return (kst, vst, qst), (oi, Li, ot.reshape(b, cq, hq * dh))
+
+        (kst, vst, qst), (ost, Lst, ots) = jax.lax.scan(
+            body, (kst0, vst0, qst0), (jnp.arange(u), xs))
+        o = ots.swapaxes(0, 1).reshape(b, seq_len, hq * dh)
+        if par.mesh is not None:
+            o = par.seq_sharded(o)
+        return o, (x, p, kst, vst, qst, ost, Lst)
+
+    def bwd_scan(res, do):
+        x, p, kst, vst, qst, ost, Lst = res
+        b = x.shape[0]
+        # chunk-stacked head-layout do + delta: [u, b, hq, cq, dh] fp32
+        dot = do.reshape(b, u, cq, hq, dh).swapaxes(0, 1)
+        dot = _shard_q_stacked(par, kind, dot)
+        dos = dot.transpose(0, 1, 3, 2, 4).astype(jnp.float32)
+        deltas = jnp.sum(dos * ost, axis=-1)  # [u, b, hq, cq]
+
+        def fetch_kv(j):
+            return _load(kst, j, kv_spec), _load(vst, j, kv_spec)
+
+        def fetch_q(i):
+            return _load(qst, i, q_spec)
+
+        # Fig. 7: outer scan over KV chunks j (dk_j/dv_j emitted as scan
+        # outputs), inner double-buffered fori_loop over query chunks
+        # i in [j, u) accumulating into the dq store carried across both.
+        def outer(carry, j):
+            dq_acc, kj, vj = carry
+            knext, vnext = fetch_kv(jnp.minimum(j + 1, u - 1))  # Fig. 6 prefetch
+
+            def pair(i, qi, st):
+                dk, dv, dq_acc = st
+                doi = jax.lax.dynamic_index_in_dim(dos, i, axis=0, keepdims=False)
+                Li = jax.lax.dynamic_index_in_dim(Lst, i, axis=0, keepdims=False)
+                di = jax.lax.dynamic_index_in_dim(deltas, i, axis=0, keepdims=False)
+                kwargs = pair_kwargs(i, j)
+                dk_c, dv_c = fa.chunk_bwd_dkv(qi, kj, vj, doi, Li, di, **kwargs)
+                dq_c = fa.chunk_bwd_dq(qi, kj, vj, doi, Li, di, **kwargs)
+                dq_i = jax.lax.dynamic_index_in_dim(dq_acc, i, axis=0, keepdims=False)
+                dq_acc = jax.lax.dynamic_update_index_in_dim(dq_acc, dq_i + dq_c, i, axis=0)
+                return dk + dk_c, dv + dv_c, dq_acc
+
+            z = jnp.zeros((b, hkv * rep, cq, dh), jnp.float32)
+            dk, dv, dq_acc = fori_double_buffered(
+                j, u, fetch_q, pair, (z, z, dq_acc),
+                live=lambda i: live_tr(i, j))
+            return (dq_acc, knext, vnext), (dk, dv)
+
+        dq0 = jnp.zeros((u, b, hq, cq, dh), jnp.float32)
+        k0, v0 = fetch_kv(0)
+        (dqs, _, _), (dks, dvs) = jax.lax.scan(
+            outer, (dq0, k0, v0), jnp.arange(u))
+
+        # per-chunk grad epilogue as one more scan; dW accumulates in the carry
+        xs = x.reshape(b, u, cq, -1).swapaxes(0, 1)
+
+        def unproj(carry, inp):
+            i, xi, dq, dk, dv = inp
+            dx, contrib = _unproject_body(p, i, xi, dq, dk, dv, b)
+            return jax.tree.map(jnp.add, carry, contrib), dx
+
+        dp0 = {"wq": jnp.zeros_like(p["wq"]), "wk": jnp.zeros_like(p["wk"]),
+               "wv": jnp.zeros_like(p["wv"])}
+        if cfg.qkv_bias:
+            dp0.update({"bq": jnp.zeros_like(p["bq"]),
+                        "bk": jnp.zeros_like(p["bk"]),
+                        "bv": jnp.zeros_like(p["bv"])})
+        dp, dxs = jax.lax.scan(unproj, dp0, (jnp.arange(u), xs, dqs, dks, dvs))
+        dx = dxs.swapaxes(0, 1).reshape(b, seq_len, -1)
+        if par.mesh is not None:
+            dx = par.seq_sharded(dx)
+        return dx, dp
+
+    fwd, bwd = (fwd_unrolled, bwd_unrolled) if unroll else (fwd_scan, bwd_scan)
 
     @jax.custom_vjp
     def f(x, p):
@@ -314,7 +518,8 @@ def fpdt_attention(
 
     x: [b, S, d] (seq-sharded).  Returns [b, S, hq*dh] (seq-sharded),
     ready for the output projection.  u = cfg.fpdt_chunks (1 = Ulysses/CP
-    baseline); offload per cfg.fpdt_offload.
+    baseline); offload per cfg.fpdt_offload; scan-compiled chunk loops
+    unless cfg.fpdt_unroll.
     """
     par = par if par is not None else ParallelContext(mesh=None)
     attn_p = {k_: p[k_] for k_ in ("wq", "wk", "wv", "bq", "bk", "bv") if k_ in p}

@@ -39,6 +39,15 @@ def zero_state(shape_sq_d, dtype=jnp.float32) -> SoftmaxState:
     )
 
 
+def zero_state_like(q: jnp.ndarray) -> SoftmaxState:
+    """Identity state shaped for a query block ``q [..., sq, d]`` (fp32 —
+    the running statistics always accumulate in fp32 regardless of q's
+    dtype).  This is the scan-carry init of the loop-compiled FPDT forward;
+    passing it as an explicit carry is numerically identical to the
+    ``carry=None`` initialization inside the chunk kernels."""
+    return zero_state(q.shape)
+
+
 def merge(a: SoftmaxState, b: SoftmaxState) -> SoftmaxState:
     """Associative merge of two partial online-softmax states."""
     m = jnp.maximum(a.m, b.m)

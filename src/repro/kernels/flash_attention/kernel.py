@@ -11,9 +11,12 @@ Design (TPU-native, see DESIGN.md §2):
   * Carry-in (acc, m, l) inputs let the FPDT sequence-chunk pipeline continue
     one softmax across chunk boundaries; outputs are the *unnormalized*
     running state, normalized once per chunk row at the JAX level.
-  * Causal masking against *global* positions: q_offset/k_offset are static
-    per chunk-pair call (the FPDT chunk loop is unrolled), so fully-masked
-    (dead) blocks are skipped with @pl.when.
+  * Causal masking against *global* positions: q_offset/k_offset arrive as a
+    scalar-prefetch operand (SMEM), so they may be *traced* values — the
+    scan-compiled FPDT pipeline calls one kernel instance with loop-carried
+    chunk offsets instead of unrolling u**2 staticly-offset copies.  Dead
+    (fully-masked) blocks are still skipped with @pl.when on a predicate
+    computed from the prefetched offsets.
   * GQA is native: k/v index maps fold the q-head -> kv-head group mapping;
     the dkv backward kernel accumulates over the q heads of each group in its
     sequential inner grid dimension.
@@ -46,16 +49,35 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _offsets_operand(q_offset, k_offset) -> jnp.ndarray:
+    """[q_offset, k_offset] as the int32 scalar-prefetch operand.
+
+    Accepts Python ints (unrolled FPDT: offsets are trace-time constants)
+    and traced int scalars (scan-compiled FPDT: offsets are loop carries).
+    """
+    return jnp.stack([jnp.asarray(q_offset, jnp.int32),
+                      jnp.asarray(k_offset, jnp.int32)])
+
+
+def _grid_spec(grid, in_specs, out_specs, scratch_shapes):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=out_specs, scratch_shapes=scratch_shapes,
+    )
+
+
 # ===========================================================================
 # Forward
 # ===========================================================================
 
 
 def _fwd_kernel(
-    q_ref, k_ref, v_ref, acc_in_ref, m_in_ref, l_in_ref,
+    offs_ref, q_ref, k_ref, v_ref, acc_in_ref, m_in_ref, l_in_ref,
     acc_out_ref, m_out_ref, l_out_ref,
     m_scr, l_scr, acc_scr,
-    *, sm_scale, causal, window, q_offset, k_offset, block_q, block_k, nk,
+    *, sm_scale, causal, window, block_q, block_k, nk,
 ):
     ik = pl.program_id(3)
     iq = pl.program_id(2)
@@ -66,8 +88,8 @@ def _fwd_kernel(
         l_scr[...] = l_in_ref[...].astype(jnp.float32)
         acc_scr[...] = acc_in_ref[...].astype(jnp.float32)
 
-    q_start = q_offset + iq * block_q
-    k_start = k_offset + ik * block_k
+    q_start = offs_ref[0] + iq * block_q
+    k_start = offs_ref[1] + ik * block_k
     # dead block: fully above the diagonal, or fully left of the window band
     dead = causal & (q_start + block_q - 1 < k_start)
     if window:
@@ -147,32 +169,34 @@ def flash_fwd(
 
     kernel = functools.partial(
         _fwd_kernel,
-        sm_scale=scale, causal=causal, window=window, q_offset=q_offset,
-        k_offset=k_offset, block_q=block_q, block_k=block_k, nk=nk,
+        sm_scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk,
     )
     grid = (b, hq, nq, nk)
-    q_spec = pl.BlockSpec((None, None, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0))
-    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, iq, ik: (b_, h // g, ik, 0))
-    vec_spec = pl.BlockSpec((None, None, block_q), lambda b_, h, iq, ik: (b_, h, iq))
+    q_spec = pl.BlockSpec((None, None, block_q, d), lambda b_, h, iq, ik, offs: (b_, h, iq, 0))
+    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, iq, ik, offs: (b_, h // g, ik, 0))
+    vec_spec = pl.BlockSpec((None, None, block_q), lambda b_, h, iq, ik, offs: (b_, h, iq))
 
     acc, m, l = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
-        out_specs=[q_spec, vec_spec, vec_spec],
+        grid_spec=_grid_spec(
+            grid,
+            [q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
+            [q_spec, vec_spec, vec_spec],
+            [
+                _vmem((block_q,), jnp.float32),
+                _vmem((block_q,), jnp.float32),
+                _vmem((block_q, d), jnp.float32),
+            ],
+        ),
         out_shape=[
             jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
             jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
             jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
         ],
-        scratch_shapes=[
-            _vmem((block_q,), jnp.float32),
-            _vmem((block_q,), jnp.float32),
-            _vmem((block_q, d), jnp.float32),
-        ],
         interpret=interpret,
         compiler_params=_compiler_params(),
-    )(q, k, v, acc0, m0, l0)
+    )(_offsets_operand(q_offset, k_offset), q, k, v, acc0, m0, l0)
     return acc, m, l
 
 
@@ -199,10 +223,10 @@ def _compiler_params():
 
 
 def _dq_kernel(
-    q_ref, k_ref, v_ref, do_ref, L_ref, delta_ref,
+    offs_ref, q_ref, k_ref, v_ref, do_ref, L_ref, delta_ref,
     dq_ref,
     dq_scr,
-    *, sm_scale, causal, window, q_offset, k_offset, block_q, block_k, nk,
+    *, sm_scale, causal, window, block_q, block_k, nk,
 ):
     ik = pl.program_id(3)
     iq = pl.program_id(2)
@@ -211,8 +235,8 @@ def _dq_kernel(
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    q_start = q_offset + iq * block_q
-    k_start = k_offset + ik * block_k
+    q_start = offs_ref[0] + iq * block_q
+    k_start = offs_ref[1] + ik * block_k
     dead = causal & (q_start + block_q - 1 < k_start)
     if window:
         dead = dead | (k_start + block_k - 1 < q_start - window + 1)
@@ -262,22 +286,24 @@ def flash_bwd_dq(
     interpret = _default_interpret() if interpret is None else interpret
 
     kernel = functools.partial(
-        _dq_kernel, sm_scale=scale, causal=causal, window=window, q_offset=q_offset,
-        k_offset=k_offset, block_q=block_q, block_k=block_k, nk=nk,
+        _dq_kernel, sm_scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk,
     )
-    q_spec = pl.BlockSpec((None, None, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0))
-    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, iq, ik: (b_, h // g, ik, 0))
-    vec_spec = pl.BlockSpec((None, None, block_q), lambda b_, h, iq, ik: (b_, h, iq))
+    q_spec = pl.BlockSpec((None, None, block_q, d), lambda b_, h, iq, ik, offs: (b_, h, iq, 0))
+    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, iq, ik, offs: (b_, h // g, ik, 0))
+    vec_spec = pl.BlockSpec((None, None, block_q), lambda b_, h, iq, ik, offs: (b_, h, iq))
     return pl.pallas_call(
         kernel,
-        grid=(b, hq, nq, nk),
-        in_specs=[q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
-        out_specs=q_spec,
+        grid_spec=_grid_spec(
+            (b, hq, nq, nk),
+            [q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
+            q_spec,
+            [_vmem((block_q, d), jnp.float32)],
+        ),
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
-        scratch_shapes=[_vmem((block_q, d), jnp.float32)],
         interpret=interpret,
         compiler_params=_compiler_params(),
-    )(q, k, v, do, L, delta)
+    )(_offsets_operand(q_offset, k_offset), q, k, v, do, L, delta)
 
 
 # ===========================================================================
@@ -286,10 +312,10 @@ def flash_bwd_dq(
 
 
 def _dkv_kernel(
-    q_ref, k_ref, v_ref, do_ref, L_ref, delta_ref,
+    offs_ref, q_ref, k_ref, v_ref, do_ref, L_ref, delta_ref,
     dk_ref, dv_ref,
     dk_scr, dv_scr,
-    *, sm_scale, causal, window, q_offset, k_offset, block_q, block_k, nq, g,
+    *, sm_scale, causal, window, block_q, block_k, nq, g,
 ):
     ik = pl.program_id(2)
     t = pl.program_id(3)  # runs over g * nq (q heads of the group x q blocks)
@@ -300,8 +326,8 @@ def _dkv_kernel(
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
-    q_start = q_offset + iq * block_q
-    k_start = k_offset + ik * block_k
+    q_start = offs_ref[0] + iq * block_q
+    k_start = offs_ref[1] + ik * block_k
     dead = causal & (q_start + block_q - 1 < k_start)
     if window:
         dead = dead | (k_start + block_k - 1 < q_start - window + 1)
@@ -354,27 +380,29 @@ def flash_bwd_dkv(
     interpret = _default_interpret() if interpret is None else interpret
 
     kernel = functools.partial(
-        _dkv_kernel, sm_scale=scale, causal=causal, window=window, q_offset=q_offset,
-        k_offset=k_offset, block_q=block_q, block_k=block_k, nq=nq, g=g,
+        _dkv_kernel, sm_scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nq=nq, g=g,
     )
     # inner sequential dim covers q heads of the kv group x q blocks
     q_spec = pl.BlockSpec(
-        (None, None, block_q, d), lambda b_, h, ik, t: (b_, h * g + t // nq, t % nq, 0)
+        (None, None, block_q, d), lambda b_, h, ik, t, offs: (b_, h * g + t // nq, t % nq, 0)
     )
-    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, ik, t: (b_, h, ik, 0))
+    kv_spec = pl.BlockSpec((None, None, block_k, d), lambda b_, h, ik, t, offs: (b_, h, ik, 0))
     vec_spec = pl.BlockSpec(
-        (None, None, block_q), lambda b_, h, ik, t: (b_, h * g + t // nq, t % nq)
+        (None, None, block_q), lambda b_, h, ik, t, offs: (b_, h * g + t // nq, t % nq)
     )
     return pl.pallas_call(
         kernel,
-        grid=(b, hkv, nk, g * nq),
-        in_specs=[q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
-        out_specs=[kv_spec, kv_spec],
+        grid_spec=_grid_spec(
+            (b, hkv, nk, g * nq),
+            [q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
+            [kv_spec, kv_spec],
+            [_vmem((block_k, d), jnp.float32), _vmem((block_k, d), jnp.float32)],
+        ),
         out_shape=[
             jax.ShapeDtypeStruct((b, hkv, sk, d), jnp.float32),
             jax.ShapeDtypeStruct((b, hkv, sk, d), jnp.float32),
         ],
-        scratch_shapes=[_vmem((block_k, d), jnp.float32), _vmem((block_k, d), jnp.float32)],
         interpret=interpret,
         compiler_params=_compiler_params(),
-    )(q, k, v, do, L, delta)
+    )(_offsets_operand(q_offset, k_offset), q, k, v, do, L, delta)

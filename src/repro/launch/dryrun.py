@@ -32,6 +32,7 @@ jax.config.update("jax_persistent_cache_min_compile_time_secs", 1)
 from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
 from repro.core.parallel import ParallelContext
 from repro.launch import steps as ST
+from repro.launch.hlo import count_ops
 from repro.launch.mesh import dp_axes_of, make_production_mesh
 from repro.runtime.placement import PlacementPolicy
 
@@ -150,7 +151,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, chunks=None, offload=N
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
         }
-        rec["collectives"] = parse_collectives(compiled.as_text())
+        hlo_text = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo_text)
+        # program size: the scan-compiled FPDT/layer loops must keep this
+        # ~flat in fpdt_chunks and depth (see benchmarks/compile_scaling.py)
+        rec["hlo_ops"] = count_ops(hlo_text)
         rec["ok"] = True
     except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
         rec["ok"] = False

@@ -1,0 +1,11 @@
+"""HLO/StableHLO text analysis shared by the dry-run driver and the
+compile-scaling benchmark — one definition of the program-size heuristic so
+the two recorded numbers stay comparable."""
+from __future__ import annotations
+
+
+def count_ops(hlo_text: str) -> int:
+    """Assignment count in an (Stable)HLO module text — the program-size
+    proxy the scan-compiled pipelines are measured by (loop/branch bodies
+    are printed once, so this is ~flat in chunk count and depth)."""
+    return sum(1 for line in hlo_text.splitlines() if " = " in line)

@@ -33,6 +33,7 @@ import logging
 from typing import Any, Callable, Iterable, Iterator, Optional, Sequence, TypeVar
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 log = logging.getLogger(__name__)
@@ -210,3 +211,67 @@ def double_buffered(items: Iterable[T], fetch: Callable[[T], U]) -> Iterator[U]:
         cur = ahead
         ahead = fetch(seq[k + 1]) if k + 1 < len(seq) else None
         yield cur
+
+
+def fori_double_buffered(lo, hi, fetch: Callable, body: Callable, init,
+                         *, live: Optional[Callable] = None):
+    """Scan-carry variant of ``double_buffered`` for traced chunk loops.
+
+    Runs ``carry = body(idx, fetch(idx), carry)`` for ``idx`` in ``[lo, hi)``
+    — ``lo``/``hi`` may be traced (lowers to a while loop) — with the same
+    Fig. 6 guarantee as the generator version: the fetched value consumed at
+    iteration ``idx`` is carried in the loop state and the *next* consumed
+    chunk's fetch is issued *before* ``body(idx)``'s kernels in program
+    order, so on offload-capable backends the host->device copy of the next
+    chunk overlaps the current chunk's compute.
+
+    ``live(idx) -> bool tracer`` optionally restricts the schedule to live
+    indices: dead (window/sparsity-skipped) iterations are complete no-ops
+    — no fetch, no body — and each live iteration prefetches the next
+    *live* index (a traced search, mirroring the unrolled path's
+    ``double_buffered(live_items, fetch)`` over the filtered item list), so
+    sparse schedules keep the copy/compute overlap instead of issuing
+    fetches from skipped iterations that overlap nothing.
+    """
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+
+    def clamp(idx):
+        return jnp.clip(idx, 0, jnp.maximum(hi - 1, 0))
+
+    if live is None:
+        def step(idx, state):
+            buf, carry = state
+            nxt = fetch(clamp(idx + 1))  # clamped tail prefetch: never consumed
+            carry = body(idx, buf, carry)
+            return nxt, carry
+
+        buf0 = fetch(clamp(lo))
+        _, carry = jax.lax.fori_loop(lo, hi, step, (buf0, init))
+        return carry
+
+    def next_live(idx):
+        """Smallest live index in (idx, hi); hi when none (live() must be
+        pure index arithmetic — it is probed past the range)."""
+        return jax.lax.while_loop(
+            lambda t: (t < hi) & ~live(t), lambda t: t + 1, idx + 1)
+
+    def zeros_like_fetch():
+        shapes = jax.eval_shape(fetch, clamp(lo))
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    first = next_live(lo - 1)
+    buf0 = jax.lax.cond(first < hi, lambda: fetch(clamp(first)), zeros_like_fetch)
+
+    def step(idx, state):
+        buf, carry = state
+
+        def live_step():
+            nxt = next_live(idx)
+            nbuf = jax.lax.cond(nxt < hi, lambda: fetch(clamp(nxt)), lambda: buf)
+            return nbuf, body(idx, buf, carry)
+
+        return jax.lax.cond(live(idx), live_step, lambda: (buf, carry))
+
+    _, carry = jax.lax.fori_loop(lo, hi, step, (buf0, init))
+    return carry

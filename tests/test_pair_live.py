@@ -1,0 +1,74 @@
+"""Property tests for the FPDT chunk-liveness predicate.
+
+``pair_live`` (static, unrolled path) and ``pair_live_traced`` (jnp, scan
+path) must agree everywhere, and the window semantics must equal the dense
+token-level mask: a chunk pair is live iff at least one (q, k) token pair
+inside it survives the causal+window band.  Runs under real hypothesis when
+installed, else the deterministic fixed grid (tests/_hypothesis_compat.py).
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.fpdt import pair_live, pair_live_traced, sparsity_stride
+
+
+def _dense_window_live(i, j, cq, window):
+    """Oracle: any token pair (q in chunk i, k in chunk j) inside the band."""
+    q = np.arange(i * cq, (i + 1) * cq)[:, None]
+    k = np.arange(j * cq, (j + 1) * cq)[None, :]
+    ok = q >= k
+    if window:
+        ok = ok & (q - k < window)
+    return bool(ok.any())
+
+
+@settings(max_examples=60)
+@given(u=st.integers(min_value=1, max_value=8),
+       cq=st.sampled_from([1, 4, 8]),
+       window=st.sampled_from([0, 1, 5, 8, 17]),
+       sparsity=st.sampled_from([0.0, 0.3, 0.5, 0.75, 0.9]))
+def test_traced_matches_static(u, cq, window, sparsity):
+    kw = dict(cq=cq, window=window, sparsity=sparsity)
+    for i, j in itertools.product(range(u), repeat=2):
+        static = pair_live(i, j, **kw)
+        traced = bool(pair_live_traced(jnp.int32(i), jnp.int32(j), **kw))
+        assert static == traced, (i, j, kw)
+
+
+@settings(max_examples=40)
+@given(u=st.integers(min_value=1, max_value=8),
+       cq=st.sampled_from([1, 4, 8]),
+       window=st.sampled_from([0, 1, 5, 8, 17]))
+def test_window_equals_dense_mask(u, cq, window):
+    """With sparsity off, chunk liveness == OR-reduction of the token mask."""
+    for i, j in itertools.product(range(u), repeat=2):
+        assert pair_live(i, j, cq=cq, window=window, sparsity=0.0) == \
+            _dense_window_live(i, j, cq, window), (i, j, cq, window)
+
+
+@settings(max_examples=40)
+@given(u=st.integers(min_value=2, max_value=8),
+       cq=st.sampled_from([4, 8]),
+       sparsity=st.sampled_from([0.3, 0.5, 0.75, 0.9]))
+def test_sparsity_invariants(u, cq, sparsity):
+    kw = dict(cq=cq, window=0, sparsity=sparsity)
+    stride = sparsity_stride(sparsity)
+    for i in range(u):
+        # the diagonal is always attended (exactness of the local softmax)
+        assert pair_live(i, i, **kw)
+        # future chunks never
+        for j in range(i + 1, u):
+            assert not pair_live(i, j, **kw)
+        # off-diagonal keep-set is exactly the distance-stride comb
+        for j in range(i):
+            assert pair_live(i, j, **kw) == ((i - j - 1) % stride == 0)
+
+
+def test_dense_schedule_keeps_everything():
+    for u, cq in [(1, 8), (4, 4), (8, 2)]:
+        for i, j in itertools.product(range(u), repeat=2):
+            assert pair_live(i, j, cq=cq, window=0, sparsity=0.0) == (j <= i)
