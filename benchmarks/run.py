@@ -25,6 +25,7 @@ def main() -> None:
     from benchmarks import compile_scaling
     from benchmarks import kernels_bench
     from benchmarks import paper_tables as PT
+    from benchmarks import serve_bench
 
     suites = {
         "table1": PT.table1_max_context,
@@ -35,6 +36,7 @@ def main() -> None:
         "table4": PT.table4_sparse,
         "kernels": kernels_bench.run,
         "compile_scaling": compile_scaling.run,
+        "serve": serve_bench.run,
     }
     sel = args.only or list(suites)
     failures = 0

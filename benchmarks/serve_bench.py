@@ -1,0 +1,148 @@
+"""Program-size / throughput scaling of the scan-compiled decode engine.
+
+The serving acceptance bar mirrors the training one
+(`benchmarks/compile_scaling.py`): decode program size must be flat in
+BOTH knobs that used to unroll —
+
+  * ``n_host_chunks`` — the host-KV streaming loop is
+    `runtime.placement.fori_double_buffered` (body traced once), where the
+    retired generator-based path emitted one online-softmax merge per chunk;
+  * generated-token count — the whole generation is one
+    `runtime.decode_loop.decode_tokens` `lax.scan`, where the per-token
+    Python loop re-dispatched (and on first use re-traced) per token.
+
+For every cell this reports traced jaxpr equation count, StableHLO op
+count of the lowered module, trace+lower wall-clock, and (post-compile)
+ms/step and tokens/sec on the real machine.  Emits name,value rows for
+``benchmarks.run`` plus a JSON blob; the measured table is committed in
+``docs/serving.md``.
+
+Usage: python benchmarks/serve_bench.py [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+import sys
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+B = 2           # batch rows
+PROMPT = 16     # prefill length
+CACHE_LEN = 64  # cache capacity: divisible by every chunk count below
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    from repro.configs import get_config, reduced
+    from repro.models import serve as SV
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-1b")),
+                              param_dtype="float32", remat="none")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab_size)
+    logits, cache = SV.prefill_step(cfg, None, params, {"tokens": toks},
+                                    max_len=CACHE_LEN)
+    tok0 = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    return cfg, params, cache, tok0
+
+
+def measure(n_host_chunks: int, num_steps: int) -> dict:
+    from benchmarks.compile_scaling import count_eqns, count_hlo_ops
+    from repro.core.parallel import ParallelContext
+    from repro.runtime import decode_loop as DL
+
+    cfg, params, cache, tok0 = _setup()
+    par = ParallelContext(mesh=None) if n_host_chunks else None
+
+    def f(cache, tok, pos, key):
+        return DL.decode_tokens(cfg, par, params, cache, tok, pos,
+                                num_steps=num_steps,
+                                n_host_chunks=n_host_chunks, key=key)
+
+    args = (cache, tok0, jnp.full((B,), PROMPT, jnp.int32), jax.random.PRNGKey(2))
+    t0 = time.perf_counter()
+    jaxpr = jax.make_jaxpr(f)(*args)
+    trace_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lowered = jax.jit(f).lower(*args)
+    lower_s = time.perf_counter() - t0
+    compiled = lowered.compile()
+    jax.block_until_ready(compiled(*args))  # warm-up
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(*args))
+        best = min(best, time.perf_counter() - t0)
+    return {
+        "n_host_chunks": n_host_chunks, "num_steps": num_steps,
+        "jaxpr_eqns": count_eqns(jaxpr), "hlo_ops": count_hlo_ops(lowered),
+        "trace_s": round(trace_s, 3), "lower_s": round(lower_s, 3),
+        "ms_per_step": round(best / num_steps * 1e3, 3),
+        "tok_per_s": round(num_steps * B / best, 1),
+    }
+
+
+def sweep(chunk_sweep=(0, 2, 8, 32), gen_sweep=(2, 8, 32),
+          fixed_gen=8, fixed_chunks=4) -> List[dict]:
+    recs = []
+
+    def show(r):
+        print("chunks={n_host_chunks:<3d} steps={num_steps:<3d} "
+              "jaxpr_eqns={jaxpr_eqns:<6d} hlo_ops={hlo_ops:<6d} "
+              "trace={trace_s}s lower={lower_s}s "
+              "ms/step={ms_per_step:<8} tok/s={tok_per_s}".format(**r))
+
+    for c in chunk_sweep:
+        recs.append(measure(c, fixed_gen))
+        show(recs[-1])
+    for g in gen_sweep:
+        recs.append(measure(fixed_chunks, g))
+        show(recs[-1])
+    return recs
+
+
+def run() -> List[str]:
+    """benchmarks.run entry: summarized growth factors + throughput."""
+    recs = sweep(chunk_sweep=(2, 32), gen_sweep=(2, 32), fixed_gen=8, fixed_chunks=4)
+    by_c = {r["n_host_chunks"]: r for r in recs[:2]}
+    by_g = {r["num_steps"]: r for r in recs[2:]}
+    rows = ["bench,name,value,derived"]
+    g = by_c[32]["hlo_ops"] / by_c[2]["hlo_ops"]
+    rows.append(f"bench,decode_hlo_growth_chunks_2_to_32,{g:.3f},x")
+    g = by_g[32]["hlo_ops"] / by_g[2]["hlo_ops"]
+    rows.append(f"bench,decode_hlo_growth_gen_2_to_32,{g:.3f},x")
+    rows.append(f"bench,decode_tok_per_s_u4_gen32,{by_g[32]['tok_per_s']},tok/s")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    recs = sweep()
+    by_c = {r["n_host_chunks"]: r for r in recs[:4]}
+    by_g = {r["num_steps"]: r for r in recs[4:]}
+    print(f"\nhost-chunk growth 2 -> 32 (gen=8):  "
+          f"jaxpr x{by_c[32]['jaxpr_eqns'] / by_c[2]['jaxpr_eqns']:.2f}, "
+          f"hlo x{by_c[32]['hlo_ops'] / by_c[2]['hlo_ops']:.2f}")
+    print(f"gen-length growth 2 -> 32 (u=4):    "
+          f"jaxpr x{by_g[32]['jaxpr_eqns'] / by_g[2]['jaxpr_eqns']:.2f}, "
+          f"hlo x{by_g[32]['hlo_ops'] / by_g[2]['hlo_ops']:.2f}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(recs, fh, indent=1)
+
+
+if __name__ == "__main__":
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)  # for `from benchmarks.compile_scaling import`
+    sys.path.insert(0, os.path.join(_root, "src"))
+    main()

@@ -1,7 +1,10 @@
-"""Batched serving example: prefill a batch of prompts, then greedy-decode
-with a jitted incremental step — including FPDT-style host-streamed KV.
+"""Continuous-batching serving example: a mixed-length prompt workload run
+through the scan-compiled decode engine (`runtime/decode_loop.ServeEngine`)
+— more prompts than slots, variable prompt lengths (position-masked
+prefill), staggered finishes (random stop token), slot reuse on completion,
+FPDT-style host-streamed KV.
 
-  PYTHONPATH=src python examples/serve_batched.py --batch 4 --gen 16
+  PYTHONPATH=src python examples/serve_batched.py --slots 4 --requests 10
 """
 import argparse
 import os
@@ -13,51 +16,56 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import dataclasses
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.parallel import ParallelContext
-from repro.models import serve as SV
 from repro.models import transformer as T
+from repro.runtime import decode_loop as DL
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4, help="concurrent cache rows")
+    ap.add_argument("--requests", type=int, default=10, help="queued prompts")
+    ap.add_argument("--bucket", type=int, default=48, help="prompt-length bucket")
+    ap.add_argument("--min-prompt", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16, help="max new tokens per request")
+    ap.add_argument("--segment", type=int, default=8, help="decode steps per scan segment")
     ap.add_argument("--host-kv-chunks", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = dataclasses.replace(reduced(get_config(args.arch)), remat="none")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    key = jax.random.PRNGKey(1)
-    max_len = args.prompt_len + args.gen
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    rng = np.random.default_rng(args.seed)
+
+    # the workload: variable-length prompts, several per slot
+    lens = rng.integers(args.min_prompt, args.bucket + 1, size=args.requests)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist() for n in lens]
+    # a "stop token" some sequences will happen to emit -> staggered finishes
+    stop = int(rng.integers(0, cfg.vocab_size))
+
+    par = ParallelContext(mesh=None) if args.host_kv_chunks else None
+    engine = DL.ServeEngine(
+        cfg, params, slots=args.slots, bucket=args.bucket,
+        max_new_tokens=args.gen, segment=args.segment,
+        n_host_chunks=args.host_kv_chunks,
+        sampling=DL.SamplingConfig(temperature=args.temperature),
+        stop_tokens=(stop,), par=par)
 
     t0 = time.perf_counter()
-    logits, cache = SV.prefill_step(cfg, None, params, {"tokens": prompts}, max_len=max_len)
-    jax.block_until_ready(logits)
-    print(f"prefill: {args.batch} x {args.prompt_len} tokens in "
-          f"{(time.perf_counter()-t0)*1e3:.0f} ms")
-
-    par = ParallelContext(mesh=None)
-    decode = jax.jit(lambda c, t, p: SV.decode_step(
-        cfg, par, params, c, {"tokens": t}, p, n_host_chunks=args.host_kv_chunks))
-    tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        logits, cache = decode(cache, out[-1], jnp.int32(args.prompt_len + i))
-        out.append(jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32))
-    jax.block_until_ready(out[-1])
+    outs = engine.generate(prompts, key=jax.random.PRNGKey(args.seed))
     dt = time.perf_counter() - t0
-    print(f"decode (host-streamed KV, {args.host_kv_chunks} chunks): "
-          f"{args.gen-1} steps in {dt*1e3:.0f} ms ({dt/(args.gen-1)*1e3:.1f} ms/step)")
-    seqs = jnp.concatenate(out, axis=1)
-    for i in range(args.batch):
-        print(f"  seq{i}: {seqs[i, :10].tolist()}...")
+    total = sum(len(o) for o in outs)
+    print(f"{args.requests} requests (prompt {lens.min()}-{lens.max()} tokens) "
+          f"over {args.slots} slots, host-KV chunks={args.host_kv_chunks}: "
+          f"{total} tokens in {dt*1e3:.0f} ms ({total/dt:.1f} tok/s incl. compile)")
+    for i, (n, o) in enumerate(zip(lens, outs)):
+        fin = "stop" if o and o[-1] == stop else "budget"
+        print(f"  req{i}: prompt={n:<3d} generated={len(o):<3d} [{fin}] {o[:8]}...")
 
 
 if __name__ == "__main__":

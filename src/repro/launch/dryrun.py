@@ -116,7 +116,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, chunks=None, offload=N
     cfg = ST.tuned_config(get_config(arch), shape, chunks=chunks, offload=offload)
     n_host_chunks = 0
     if shape.kind == "decode" and shape.seq_len >= 500_000 and cfg.family in ("dense",):
-        n_host_chunks = 8  # EXTRA cell: FPDT host-streamed KV decode
+        # EXTRA cell: FPDT host-streamed KV decode.  --chunks sweeps the
+        # host-KV chunk count here (the decode-side analogue of u; the
+        # scan-compiled decode keeps program size flat in it).
+        n_host_chunks = chunks if chunks else 8
+        if shape.seq_len % n_host_chunks:
+            # _decode_attention silently falls back to on-device attention
+            # for non-dividing chunk counts — that would record numbers for
+            # the wrong program under this cell's label
+            raise ValueError(
+                f"--chunks {n_host_chunks} does not divide the decode cache "
+                f"length {shape.seq_len}; the host-streamed path requires "
+                f"equal slabs")
     rec = {
         "arch": arch, "shape": shape_name, "mesh": "multi" if multi_pod else "single",
         "kind": shape.kind, "chunks": cfg.fpdt_chunks, "offload": cfg.fpdt_offload,

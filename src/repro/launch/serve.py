@@ -1,7 +1,15 @@
-"""Serving CLI: batched prefill + greedy decode.
+"""Serving CLI: batched prefill + scan-compiled multi-token decode.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
-      --batch 4 --prompt-len 64 --gen 32 [--host-kv-chunks 8]
+      --batch 4 --prompt-len 64 --gen 32 [--host-kv-chunks 8] \
+      [--temperature 0.8 --top-k 40]
+
+The whole generation is ONE jitted ``runtime.decode_loop.decode_tokens``
+call (a ``lax.scan`` over steps), so there is a single dispatch for the
+entire decode and program size is flat in ``--gen`` and
+``--host-kv-chunks``.  ``--per-token`` keeps the legacy one-jitted-call-
+per-token loop for A/B timing (and is the only mode for the audio-frame
+frontend, which feeds embeddings instead of token ids).
 """
 from __future__ import annotations
 
@@ -19,8 +27,18 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--host-kv-chunks", type=int, default=0,
                     help="FPDT-for-inference: stream KV from host in N chunks")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples at this temperature")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k best tokens (0 = all)")
+    ap.add_argument("--per-token", action="store_true",
+                    help="legacy per-token dispatch loop instead of lax.scan")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.host_kv_chunks and (args.prompt_len + args.gen) % args.host_kv_chunks:
+        # models/serve.py would silently fall back to on-device attention
+        ap.error(f"--host-kv-chunks {args.host_kv_chunks} must divide the "
+                 f"cache length prompt-len+gen={args.prompt_len + args.gen}")
 
     import jax
     import jax.numpy as jnp
@@ -29,6 +47,7 @@ def main():
     from repro.core.parallel import ParallelContext
     from repro.models import serve as SV
     from repro.models import transformer as T
+    from repro.runtime import decode_loop as DL
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -59,24 +78,44 @@ def main():
     t_prefill = time.perf_counter() - t0
     print(f"prefill {args.prompt_len} tokens x {b} seqs: {t_prefill*1e3:.1f} ms")
 
-    decode = jax.jit(
-        lambda cache, tok, pos: SV.decode_step(
-            cfg, par, params, cache, tok, pos, n_host_chunks=args.host_kv_chunks)
-    )
-    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1)[:, None].astype(jnp.int32)
-    outs = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        inp = ({"tokens": outs[-1]} if cfg.frontend != "audio_frames"
-               else {"frame_embeds": jax.random.normal(key, (b, 1, cfg.d_model),
-                                                       jnp.dtype(cfg.param_dtype))})
-        logits, cache = decode(cache, inp, jnp.int32(args.prompt_len + i))
-        outs.append(jnp.argmax(logits[:, : cfg.vocab_size], -1)[:, None].astype(jnp.int32))
-    jax.block_until_ready(outs[-1])
+    sampling = DL.SamplingConfig(temperature=args.temperature, top_k=args.top_k)
+    key, sub = jax.random.split(key)
+    tok0 = DL.sample_token(logits[:, : cfg.vocab_size], sub, sampling)
+    steps = args.gen - 1
+
+    if args.per_token or cfg.frontend == "audio_frames":
+        decode = jax.jit(
+            lambda cache, inp, pos: SV.decode_step(
+                cfg, par, params, cache, inp, pos, n_host_chunks=args.host_kv_chunks)
+        )
+        outs = [tok0[:, None]]
+        t0 = time.perf_counter()
+        for i in range(steps):
+            inp = ({"tokens": outs[-1]} if cfg.frontend != "audio_frames"
+                   else {"frame_embeds": jax.random.normal(key, (b, 1, cfg.d_model),
+                                                           jnp.dtype(cfg.param_dtype))})
+            logits, cache = decode(cache, inp, jnp.int32(args.prompt_len + i))
+            key, sub = jax.random.split(key)
+            outs.append(DL.sample_token(logits[:, : cfg.vocab_size], sub, sampling)[:, None])
+        jax.block_until_ready(outs[-1])
+        seqs = jnp.concatenate(outs, axis=1)
+        mode = "per-token loop"
+    else:
+        decode = jax.jit(lambda cache, tok, pos, key: DL.decode_tokens(
+            cfg, par, params, cache, tok, pos, num_steps=steps,
+            n_host_chunks=args.host_kv_chunks, sampling=sampling, key=key))
+        key, sub = jax.random.split(key)
+        toks, _ = decode(cache, tok0[:, None], jnp.full((b,), args.prompt_len, jnp.int32), sub)
+        jax.block_until_ready(toks)  # includes compile; timed run below
+        t0 = time.perf_counter()
+        toks, _ = decode(cache, tok0[:, None], jnp.full((b,), args.prompt_len, jnp.int32), sub)
+        jax.block_until_ready(toks)
+        seqs = jnp.concatenate([tok0[:, None], toks], axis=1)
+        mode = "scan"
     dt = time.perf_counter() - t0
-    print(f"decode {args.gen - 1} steps x {b} seqs: {dt*1e3:.1f} ms "
-          f"({dt / max(1, args.gen - 1) * 1e3:.2f} ms/step)")
-    seqs = jnp.concatenate(outs, axis=1)
+    print(f"decode [{mode}] {steps} steps x {b} seqs: {dt*1e3:.1f} ms "
+          f"({dt / max(1, steps) * 1e3:.2f} ms/step, "
+          f"{steps * b / dt:.1f} tok/s)")
     print("generated token ids (first seq):", seqs[0].tolist())
 
 

@@ -1,17 +1,28 @@
 """Serving path: cache init, prefill, and single-token decode.
 
 Cache layouts (stacked over layer cycles C so decode scans one cycle body):
-  attn        {"k","v": [C, b, S, hkv, dh], "pos_filled": scalar via step arg}
-  local_attn  same with S = window (ring buffer; entry positions tracked)
+  attn        {"k","v": [C, b, S, hkv, dh], "kpos": [C, b, S] filled positions}
+  local_attn  same with S = window (ring buffer; entry positions in "kpos")
   ssm         {"conv": [C, b, k-1, di], "ssm": [C, b, di, ds]}
   rglru       {"conv": [C, b, k-1, di], "h": [C, b, di]}
 
+Decode positions are per-sequence: every entry point here accepts ``pos``
+as a scalar or an int32 ``[b]`` vector, so a batch may hold sequences at
+different depths (the continuous-batching engine in
+``runtime/decode_loop.py`` relies on this).  ``kpos`` entries of ``-1``
+mark unfilled/invalid cache slots; attention masks on ``kpos`` rather than
+on slot index, which is what makes position-masked (padded) prefill exact.
+
 Sharding: Ulysses archs shard cache *heads* over the model axis; CP archs
-shard cache *sequence*; SSM/RG states shard channels.  ``fpdt_offload``
-additionally keeps attention KV caches in host memory (when the backend's
-placement policy supports it) and streams them chunk-by-chunk through the
-online-softmax merge at decode time with explicit double buffering — the
-FPDT pipeline applied to inference (the EXTRA long_500k cell).
+shard cache *sequence*; SSM/RG states shard channels.  With
+``n_host_chunks > 0`` the attention KV cache lives in host memory (when
+the backend's placement policy supports it) and decode streams it
+chunk-by-chunk through the online-softmax merge via
+``runtime.placement.fori_double_buffered`` — the same scan-carry Fig. 6
+pipeline the training path uses, so decode program size is flat in the
+chunk count and dead (unfilled) chunks skip both the host fetch and the
+merge.  This is the FPDT pipeline applied to inference (the EXTRA
+long_500k cell); see ``docs/serving.md``.
 """
 from __future__ import annotations
 
@@ -33,7 +44,7 @@ from repro.models.transformer import (
     layout_of,
     pattern_of,
 )
-from repro.runtime.placement import double_buffered
+from repro.runtime.placement import fori_double_buffered
 
 Params = Dict[str, Any]
 
@@ -130,19 +141,18 @@ def cache_shardings(cfg: ModelConfig, par: ParallelContext, cache):
 def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Params,
                       x: jnp.ndarray, cache: Params, pos, *, window: int = 0,
                       n_host_chunks: int = 0):
-    """x [b, 1, d]; returns (attn_out [b, 1, qd], new cache)."""
+    """x [b, 1, d]; pos scalar or [b]; returns (attn_out [b, 1, qd], new cache)."""
     b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))  # per-sequence
     q, k, v = L.qkv_proj(cfg, p, x)  # [b, 1, h, dh]
-    posv = pos + jnp.zeros((1,), jnp.int32)
-    q = L.apply_rope(q, posv, cfg.rope_theta)
-    k = L.apply_rope(k, posv, cfg.rope_theta)
+    q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
     S = cache["k"].shape[1]
-    slot = jnp.where(window > 0, pos % S, jnp.minimum(pos, S - 1))
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-    kpos = jax.lax.dynamic_update_slice(
-        cache["kpos"], jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32), (0, slot)
-    )
+    slot = jnp.where(window > 0, pos % S, jnp.minimum(pos, S - 1))  # [b]
+    bi = jnp.arange(b)
+    ck = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
+    kpos = cache["kpos"].at[bi, slot].set(pos)
 
     g = cfg.num_heads // cfg.num_kv_heads
     qf = q[:, 0].astype(jnp.float32)  # [b, hq, dh]
@@ -153,9 +163,9 @@ def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Param
         ke = jnp.repeat(kc.astype(jnp.float32), g, axis=2) if g > 1 else kc.astype(jnp.float32)
         ve = jnp.repeat(vc.astype(jnp.float32), g, axis=2) if g > 1 else vc.astype(jnp.float32)
         s = jnp.einsum("bhd,bshd->bhs", qf, ke) * scale
-        ok = (kp >= 0) & (kp <= pos)
+        ok = (kp >= 0) & (kp <= pos[:, None])
         if window:
-            ok = ok & (kp > pos - window)
+            ok = ok & (kp > (pos - window)[:, None])
         s = jnp.where(ok[:, None, :], s, NEG_INF)
         m = jnp.max(s, axis=-1)
         pr = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m[..., None]))
@@ -164,7 +174,10 @@ def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Param
         return SoftmaxState(acc[:, :, None, :], m[:, :, None], l[:, :, None])
 
     if n_host_chunks and S % n_host_chunks == 0:
-        # FPDT-for-inference: stream host-resident KV chunk by chunk
+        # FPDT-for-inference: stream host-resident KV chunk by chunk through
+        # the scan-carry Fig. 6 pipeline — the chunk body is traced ONCE, so
+        # decode program size is flat in n_host_chunks (the generator-based
+        # double_buffered this replaced emitted one merge per chunk).
         cs = S // n_host_chunks
         # slab placement: seq over ALL axes (host<->device moves must not be
         # partially replicated), else unsharded
@@ -175,19 +188,26 @@ def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Param
                 slab_spec = (None, all_axes, None, None)
 
         def fetch(c):
-            kc = jax.lax.slice_in_dim(ck, c * cs, (c + 1) * cs, axis=1)
-            vc = jax.lax.slice_in_dim(cv, c * cs, (c + 1) * cs, axis=1)
-            kp = jax.lax.slice_in_dim(kpos, c * cs, (c + 1) * cs, axis=1)
+            kc = jax.lax.dynamic_slice_in_dim(ck, c * cs, cs, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(cv, c * cs, cs, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kpos, c * cs, cs, axis=1)
             if par is not None:
                 kc = par.to_device(kc, *(slab_spec or ()))
                 vc = par.to_device(vc, *(slab_spec or ()))
             return kc, vc, kp
 
-        state = zero_state((b, cfg.num_heads, 1, cfg.head_dim))
-        # chunk c+1's host->device fetch is issued before chunk c's merge
-        # (explicit double buffering, same pipeline as training FPDT)
-        for kc, vc, kp in double_buffered(range(n_host_chunks), fetch):
-            state = merge(state, attend(kc, vc, kp))
+        # Liveness: full-attn slots fill [0, pos] in order (this path is
+        # never taken for the windowed ring buffer), so a chunk whose first
+        # slot lies beyond every sequence's position holds no valid entries
+        # — skipping it skips the host fetch AND the merge, and is exact
+        # because a fully-masked attend() yields merge's identity element.
+        hi_pos = jnp.max(pos)
+        state = fori_double_buffered(
+            0, n_host_chunks, fetch,
+            lambda c, buf, st: merge(st, attend(*buf)),
+            zero_state((b, cfg.num_heads, 1, cfg.head_dim)),
+            live=lambda c: (c * cs) <= hi_pos,
+        )
         o = finalize(state)[:, :, 0]  # [b, h, d]
     else:
         o = finalize(attend(ck, cv, kpos))[:, :, 0]
@@ -231,17 +251,32 @@ def _decode_block(cfg, par, kind, p, h, cache, pos, n_host_chunks=0):
 def decode_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
                 cache: Params, inp: Dict[str, jnp.ndarray], pos,
                 n_host_chunks: int = 0):
-    """One decode step. inp: {"tokens": [b,1]} or {"frame_embeds": [b,1,d]}.
+    """One decode step: advance every sequence in the batch by one token.
+
+    Contract:
+      inp    — {"tokens": [b, 1] int32} or {"frame_embeds": [b, 1, d]}.
+      pos    — scalar or int32 [b]: the position each sequence's incoming
+               token occupies.  The token is written into its cache slot
+               (``kpos[slot] = pos``) and attends to entries with
+               ``0 <= kpos <= pos``, so batch rows may sit at different
+               depths.
+      cache  — pytree from ``init_cache``/``prefill_step``; the returned
+               cache is the same pytree with exactly the ``pos`` slots of
+               every layer updated (shape- and dtype-stable, so it can ride
+               a ``lax.scan`` carry — see ``runtime/decode_loop.py``).
+      n_host_chunks — stream each attention layer's KV in this many chunks
+               through ``fori_double_buffered`` (0 = on-device attention).
 
     Returns (logits [b, vocab] fp32, new cache)."""
     if cfg.frontend == "audio_frames":
         h = inp["frame_embeds"]
-        # sinusoidal positional embedding at the (traced) decode position
-        d = cfg.d_model
+        # sinusoidal positional embedding at the (traced) decode position(s)
+        b, d = h.shape[0], cfg.d_model
+        posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
         dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
-        ang = jnp.asarray(pos, jnp.float32) / jnp.power(10000.0, dim / d)
-        pe = jnp.zeros((1, d), jnp.float32).at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
-        h = h + pe.astype(h.dtype)[None]
+        ang = posb.astype(jnp.float32)[:, None] / jnp.power(10000.0, dim / d)
+        pe = jnp.zeros((b, d), jnp.float32).at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+        h = h + pe.astype(h.dtype)[:, None]
     else:
         h = params["embed"][inp["tokens"]].astype(jnp.dtype(cfg.param_dtype))
     pat, n_cycles, tail = layout_of(cfg)
@@ -277,14 +312,45 @@ def decode_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params
 
 
 def prefill_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
-                 batch: Dict[str, jnp.ndarray], max_len: int):
-    """Forward over the prompt, returning (last-token logits, filled cache)."""
+                 batch: Dict[str, jnp.ndarray], max_len: int,
+                 lengths: Optional[jnp.ndarray] = None):
+    """Forward over the prompt batch, returning (logits, filled cache).
+
+    Contract:
+      batch   — prompt batch ({"tokens": [b, s]} or frontend equivalents);
+                every row runs the full s-length forward.
+      max_len — cache capacity (prompt + generation budget); the returned
+                cache is ready for ``decode_step`` at ``pos = s`` (or
+                ``pos = lengths`` per row).
+      lengths — optional int32 [b] of true prompt lengths for
+                *position-masked* prefill of RIGHT-padded variable-length
+                prompts: cache entries at positions >= ``lengths[i]`` are
+                marked invalid (``kpos = -1``) and row i's logits are taken
+                at its last real token (position ``lengths[i] - 1``) rather
+                than at s-1.  Right padding + causal attention guarantee
+                real tokens never attend to pads, so this is exact for
+                global-attention blocks.  Recurrent states (ssm/rglru) and
+                the local_attn ring buffer integrate pad tokens into their
+                carry, so archs containing those block kinds must prefill
+                at exact length (raises ValueError).
+
+    Returns (logits [b, vocab] fp32 at each row's last real token, cache).
+    """
     from repro.models import transformer as T
 
     h = T.embed_input(cfg, params, batch)
     h = h.astype(jnp.dtype(cfg.param_dtype))
     b, s, _ = h.shape
     pat, n_cycles, tail = layout_of(cfg)
+    if lengths is not None:
+        bad = {k for k in (*pat, *tail) if k != "attn"}
+        if bad:
+            raise ValueError(
+                f"position-masked prefill (lengths=...) only supports pure "
+                f"global-attention layouts; {cfg.name} contains {sorted(bad)} "
+                f"blocks whose state integrates pad tokens — prefill those "
+                f"at exact length instead")
+        lengths = jnp.asarray(lengths, jnp.int32)
     if par is not None and par.mesh is not None:
         h = par.seq_sharded(h)
 
@@ -303,10 +369,13 @@ def prefill_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Param
             W = min(cfg.window, max_len) if kind == "local_attn" else max_len
             ck = _attn_cache(cfg, b, W, h.dtype)
             take = min(W, s)
+            kp = jnp.broadcast_to(jnp.arange(s - take, s)[None], (b, take))
+            if lengths is not None:  # mask pad-token slots as never-filled
+                kp = jnp.where(kp < lengths[:, None], kp, -1)
             cache = {
                 "k": ck["k"].at[:, :take].set(k[:, s - take:].astype(ck["k"].dtype)),
                 "v": ck["v"].at[:, :take].set(v[:, s - take:].astype(ck["v"].dtype)),
-                "kpos": ck["kpos"].at[:, :take].set(jnp.arange(s - take, s)[None]),
+                "kpos": ck["kpos"].at[:, :take].set(kp),
             }
             hn2 = L.apply_norm(cfg, p["norm2"], h)
             if cfg.num_experts:
@@ -346,5 +415,6 @@ def prefill_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Param
             tcaches.append(c)
         cache["tail"] = tcaches
     h = L.apply_norm(cfg, params["final_norm"], h)
-    logits = (h[:, -1] @ head_matrix(cfg, params)).astype(jnp.float32)
+    last = h[:, -1] if lengths is None else h[jnp.arange(b), lengths - 1]
+    logits = (last @ head_matrix(cfg, params)).astype(jnp.float32)
     return logits, cache

@@ -1,0 +1,302 @@
+"""Scan-compiled multi-token decode engine (FPDT-style serving).
+
+``models/serve.py`` owns the single-step primitives (prefill, one-token
+decode against the cache); this module owns the *loop*:
+
+* ``decode_tokens`` — ONE ``lax.scan`` over generation steps.  The decode
+  body (a full layer-cycle scan, optionally with host-chunked KV streaming)
+  is traced once, so program size is flat in the number of generated tokens
+  — the per-token Python loop it replaces re-dispatched a jitted call per
+  token and paid host latency on every step.  Greedy and temperature/top-k
+  sampling, per-sequence stop-token and budget handling.
+* ``ServeEngine`` — continuous batching on top: a fixed number of cache
+  slots, variable-length prompts prefilled position-masked into a common
+  bucket, finished sequences harvested between scan segments and their
+  slots re-used for queued prompts.
+
+Measured by ``benchmarks/serve_bench.py``; architecture notes in
+``docs/serving.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.core.parallel import ParallelContext
+from repro.models import serve as SV
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """``temperature <= 0`` selects greedy argmax (the default); otherwise
+    categorical sampling at the given temperature, optionally restricted to
+    the ``top_k`` highest-probability tokens (0 = full vocabulary).
+
+    Frozen + hashable so it can close over a jitted decode loop."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+
+
+GREEDY = SamplingConfig()
+
+
+def sample_token(logits: jnp.ndarray, key, sc: SamplingConfig = GREEDY) -> jnp.ndarray:
+    """logits [b, V] fp32 -> sampled token ids [b] int32."""
+    if sc.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if sc.top_k:
+        kth = jax.lax.top_k(logits, sc.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits / sc.temperature, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# scan-compiled multi-token decode
+# ---------------------------------------------------------------------------
+
+
+def decode_tokens(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
+                  cache: Params, tok: jnp.ndarray, pos: jnp.ndarray, *,
+                  num_steps: int, n_host_chunks: int = 0,
+                  sampling: SamplingConfig = GREEDY,
+                  stop_tokens: Sequence[int] = (), pad_id: int = 0,
+                  key: Optional[jnp.ndarray] = None,
+                  done: Optional[jnp.ndarray] = None,
+                  remaining: Optional[jnp.ndarray] = None,
+                  collect_logits: bool = False):
+    """Generate up to ``num_steps`` tokens per sequence with one ``lax.scan``.
+
+    Carry contract (shape/dtype-stable across steps, scan-compatible):
+      cache      — decode cache pytree (``models/serve.py`` layouts);
+      tok [b,1]  — the token each sequence feeds NEXT.  The caller samples
+                   the first token from the prefill logits, so the full
+                   generation is ``[tok0, *emitted]``;
+      pos [b]    — the position ``tok`` occupies; frozen once a row is done;
+      key        — PRNG carry (split every step; unused under greedy);
+      done [b]   — finished rows emit ``pad_id``, stop advancing ``pos``,
+                   and stop consuming budget.  Their dummy decode writes
+                   land at the frozen ``pos`` slot, which is rewritten by
+                   the next prefill when the slot is re-used;
+      remaining [b] — per-row emission budget; a row finishes after
+                   emitting ``remaining`` tokens or a ``stop_tokens`` hit
+                   (the stop token itself is emitted).
+
+    Step t feeds ``tok`` at ``pos``, samples from the resulting logits, and
+    emits the SAMPLED token — identical to the per-token loop
+    ``outs.append(sample(decode(cache, outs[-1], pos)))``.
+
+    Returns ``(tokens [b, num_steps] int32, aux)`` with
+    ``aux = {cache, tok, pos, key, done, remaining[, logits]}`` — exactly
+    the carry, so segments chain: feed ``aux`` back in to continue (the
+    continuous-batching engine decodes in segments and harvests/refills
+    between them).  ``aux["remaining"]`` deltas give per-row emission
+    counts; ``collect_logits`` adds the per-step pre-sampling logits
+    ``[num_steps, b, vocab]`` (parity tests only — it scales with vocab).
+    """
+    if cfg.frontend == "audio_frames":
+        raise ValueError("decode_tokens feeds token ids; the audio_frames "
+                         "frontend consumes frame embeddings — drive "
+                         "decode_step directly for frame synthesis")
+    b = tok.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    key = jax.random.PRNGKey(0) if key is None else key
+    done = jnp.zeros((b,), bool) if done is None else done
+    if remaining is None:
+        remaining = jnp.full((b,), num_steps + 1, jnp.int32)
+    remaining = jnp.asarray(remaining, jnp.int32)
+    done = done | (remaining <= 0)
+    stop = jnp.asarray(tuple(stop_tokens), jnp.int32)
+
+    def step(carry, _):
+        cache, tok, pos, key, was_done, rem = carry
+        key, sub = jax.random.split(key)
+        logits, cache = SV.decode_step(cfg, par, params, cache, {"tokens": tok},
+                                       pos, n_host_chunks=n_host_chunks)
+        lv = logits[:, : cfg.vocab_size]
+        nxt = sample_token(lv, sub, sampling)
+        rem = rem - jnp.where(was_done, 0, 1)
+        emit = jnp.where(was_done, pad_id, nxt)  # the stop token itself is emitted
+        done = was_done | jnp.isin(nxt, stop) | (rem <= 0)
+        pos = jnp.where(was_done, pos, pos + 1)
+        return (cache, emit[:, None], pos, key, done, rem), (
+            emit, lv if collect_logits else None)
+
+    carry0 = (cache, tok.astype(jnp.int32), pos, key, done, remaining)
+    (cache, tok, pos, key, done, remaining), (toks, logits) = jax.lax.scan(
+        step, carry0, None, length=num_steps)
+    aux = {"cache": cache, "tok": tok, "pos": pos, "key": key,
+           "done": done, "remaining": remaining}
+    if collect_logits:
+        aux["logits"] = logits
+    return toks.T, aux
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+def _batch_axis(path) -> int:
+    """Batch-dim axis of a cache leaf: stacked cycle leaves are [C, b, ...],
+    tail leaves [b, ...] (mirrors ``SV.cache_shardings``)."""
+    names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+    return 0 if names[0] == "tail" else 1
+
+
+def insert_slot(cache: Params, one: Params, i) -> Params:
+    """Write a single-sequence (b=1) cache ``one`` into batch slot ``i`` of
+    ``cache`` — the slot-reuse primitive of continuous batching."""
+    def put(path, cb, c1):
+        return jax.lax.dynamic_update_slice_in_dim(
+            cb, c1.astype(cb.dtype), i, axis=_batch_axis(path))
+
+    return jax.tree_util.tree_map_with_path(put, cache, one)
+
+
+class ServeEngine:
+    """Continuous batching over ``slots`` concurrent cache rows.
+
+    Prompts are right-padded into a fixed ``bucket`` length and prefilled
+    position-masked (``prefill_step(..., lengths=...)``), decode runs in
+    jitted ``decode_tokens`` segments of ``segment`` steps, and between
+    segments finished rows are harvested and their slots re-prefilled with
+    queued prompts — three compiled programs total (batched prefill,
+    single-row refill prefill, decode segment) regardless of workload mix.
+
+    Variable prompt lengths require a pure global-attention layout (see
+    ``prefill_step``); recurrent archs can still use the engine when every
+    prompt exactly fills the bucket — no pad tokens, so prefill runs
+    unmasked (``lengths=None``) and stop tokens / budgets stagger finishes.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, *, slots: int,
+                 bucket: int, max_new_tokens: int,
+                 n_host_chunks: int = 0, sampling: SamplingConfig = GREEDY,
+                 stop_tokens: Sequence[int] = (), pad_id: int = 0,
+                 segment: int = 8, par: Optional[ParallelContext] = None):
+        self.cfg, self.params, self.par = cfg, params, par
+        self.slots, self.bucket = slots, bucket
+        self.max_new = max_new_tokens
+        self.max_len = bucket + max_new_tokens
+        self.sampling, self.pad_id = sampling, pad_id
+        self.segment = segment
+        stop_tokens = tuple(stop_tokens)
+        self._stop_set = frozenset(int(t) for t in stop_tokens)
+        if n_host_chunks and self.max_len % n_host_chunks:
+            # models/serve.py silently falls back to on-device attention for
+            # non-dividing chunk counts — the operator would be serving a
+            # different program than requested
+            raise ValueError(
+                f"n_host_chunks={n_host_chunks} does not divide the cache "
+                f"length bucket+max_new_tokens={self.max_len}; host-KV "
+                f"streaming requires equal slabs")
+
+        def prefill(toks, lengths):
+            return SV.prefill_step(cfg, par, params, {"tokens": toks},
+                                   max_len=self.max_len, lengths=lengths)
+
+        self._prefill = jax.jit(prefill)
+
+        def decode_seg(cache, tok, pos, key, done, rem):
+            return decode_tokens(cfg, par, params, cache, tok, pos,
+                                 num_steps=segment, n_host_chunks=n_host_chunks,
+                                 sampling=sampling, stop_tokens=stop_tokens,
+                                 pad_id=pad_id, key=key, done=done,
+                                 remaining=rem)
+
+        self._decode = jax.jit(decode_seg)
+        self._insert = jax.jit(insert_slot)
+
+    # -- helpers ---------------------------------------------------------
+    def _pad(self, rows: List[List[int]]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        lengths = [len(r) for r in rows]
+        assert all(0 < n <= self.bucket for n in lengths), \
+            f"prompt lengths {lengths} must be in (0, bucket={self.bucket}]"
+        toks = jnp.asarray(
+            [list(r) + [self.pad_id] * (self.bucket - len(r)) for r in rows],
+            jnp.int32)
+        return toks, jnp.asarray(lengths, jnp.int32)
+
+    # -- the scheduler ---------------------------------------------------
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 key: Optional[jnp.ndarray] = None) -> List[List[int]]:
+        """Run every prompt to completion (stop token or ``max_new_tokens``),
+        re-using slots as sequences finish.  Returns one generated-token
+        list per prompt (stop token included when one fired), in order."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        queue = list(enumerate(prompts))
+        out: List[List[int]] = [[] for _ in prompts]
+        B = self.slots
+
+        # initial fill: pad the first B prompts into one batched prefill;
+        # short queues fill trailing slots with a dummy row that starts done
+        first = queue[:B]
+        queue = queue[B:]
+        rows = [list(p) for _, p in first] + [[self.pad_id] * self.bucket] * (B - len(first))
+        toks, lengths = self._pad(rows)
+        # no pad tokens -> unmasked prefill (lengths=None): this is the path
+        # recurrent layouts can take, since prefill_step refuses lengths=...
+        no_pads = all(len(r) == self.bucket for r in rows)
+        logits, cache = self._prefill(toks, None if no_pads else lengths)
+        key, sub = jax.random.split(key)
+        tok = sample_token(logits[:, : self.cfg.vocab_size], sub, self.sampling)
+        owner: List[Optional[int]] = [i for i, _ in first] + [None] * (B - len(first))
+        for s, o in enumerate(owner):
+            if o is not None:
+                out[o].append(int(tok[s]))
+        pos = lengths
+        # a prefill-sampled first token may itself be a stop token (or the
+        # whole budget): such rows start done and are refilled at the next
+        # harvest, never entering the scan as live
+        done = jnp.asarray([o is None or int(tok[s]) in self._stop_set
+                            or self.max_new <= 1
+                            for s, o in enumerate(owner)])
+        rem = jnp.full((B,), self.max_new - 1, jnp.int32)
+        tok = tok[:, None]
+
+        while not all(o is None for o in owner):
+            rem_before = rem
+            toks_seg, aux = self._decode(cache, tok, pos, key, done, rem)
+            cache, tok, pos, key = aux["cache"], aux["tok"], aux["pos"], aux["key"]
+            done, rem = aux["done"], aux["remaining"]
+            emitted = jax.device_get(rem_before - rem)
+            seg_host = jax.device_get(toks_seg)
+            done_host = jax.device_get(done)
+            for s in range(B):
+                if owner[s] is None:
+                    continue
+                out[owner[s]].extend(int(t) for t in seg_host[s, : emitted[s]])
+                if not done_host[s]:
+                    continue
+                if not queue:  # finished, nothing queued: park the slot
+                    owner[s] = None
+                    continue
+                # slot reuse: single-row position-masked prefill + insert
+                idx, prompt = queue.pop(0)
+                toks1, len1 = self._pad([list(prompt)])
+                logits1, cache1 = self._prefill(
+                    toks1, None if len(prompt) == self.bucket else len1)
+                key, sub = jax.random.split(key)
+                t0 = sample_token(logits1[:, : self.cfg.vocab_size], sub,
+                                  self.sampling)
+                cache = self._insert(cache, cache1, s)
+                owner[s] = idx
+                out[idx].append(int(t0[0]))
+                tok = tok.at[s].set(t0)
+                pos = pos.at[s].set(len1[0])
+                done = done.at[s].set(int(t0[0]) in self._stop_set
+                                      or self.max_new <= 1)
+                rem = rem.at[s].set(self.max_new - 1)
+        return out

@@ -225,6 +225,19 @@ def fori_double_buffered(lo, hi, fetch: Callable, body: Callable, init,
     order, so on offload-capable backends the host->device copy of the next
     chunk overlaps the current chunk's compute.
 
+    Carry contract (everything rides a ``fori_loop`` state, so all of it
+    must be shape/dtype-stable across iterations):
+      * the loop state is ``(prefetch_buffer, carry)``; ``fetch(idx)`` must
+        return the same pytree structure/shapes/dtypes for every ``idx``
+        (it is probed once via ``jax.eval_shape`` on the live path);
+      * ``init`` must match the structure ``body`` returns — ``body`` is
+        traced once and may not change the carry's shape;
+      * ``fetch``/``body``/``live`` must be pure; ``fetch`` runs under
+        ``lax.cond`` on the live path, so its placement ops must be legal
+        in traced context (``device_put`` with memory-kind shardings is).
+    Returns the final user carry (the prefetch buffer is discarded; the
+    tail iteration's clamped prefetch is never consumed).
+
     ``live(idx) -> bool tracer`` optionally restricts the schedule to live
     indices: dead (window/sparsity-skipped) iterations are complete no-ops
     — no fetch, no body — and each live iteration prefetches the next

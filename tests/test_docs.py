@@ -1,0 +1,52 @@
+"""Docs integrity: the architecture map and doc cross-links cannot rot.
+
+Checks that (1) every relative markdown link inside ``docs/*.md`` resolves,
+(2) every ``docs/...`` path referenced from ROADMAP.md / CHANGES.md exists,
+and (3) ``docs/README.md`` (the architecture map) links every doc page."""
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = os.path.join(ROOT, "docs")
+
+# [text](target) / [text](target#anchor) — external schemes skipped below
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+?)(?:#[^)]*)?\)")
+DOC_REF_RE = re.compile(r"docs/[A-Za-z0-9_.\-/]*[A-Za-z0-9_\-/]")
+
+
+def _md_files():
+    return sorted(f for f in os.listdir(DOCS) if f.endswith(".md"))
+
+
+def test_docs_relative_links_resolve():
+    missing = []
+    for fn in _md_files():
+        with open(os.path.join(DOCS, fn)) as fh:
+            text = fh.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")) or not target:
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(DOCS, target))):
+                missing.append(f"docs/{fn} -> {target}")
+    assert not missing, f"dangling doc links: {missing}"
+
+
+def test_root_files_doc_references_resolve():
+    missing = []
+    for name in ("ROADMAP.md", "CHANGES.md"):
+        with open(os.path.join(ROOT, name)) as fh:
+            text = fh.read()
+        for ref in DOC_REF_RE.findall(text):
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                missing.append(f"{name} -> {ref}")
+    assert not missing, f"dangling docs/ references: {missing}"
+
+
+def test_architecture_map_links_every_doc_page():
+    readme = os.path.join(DOCS, "README.md")
+    assert os.path.exists(readme), "docs/README.md (architecture map) missing"
+    with open(readme) as fh:
+        text = fh.read()
+    unlinked = [fn for fn in _md_files()
+                if fn != "README.md" and fn not in text]
+    assert not unlinked, f"docs/README.md does not link: {unlinked}"

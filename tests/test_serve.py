@@ -1,4 +1,6 @@
-"""Serving: prefill + incremental decode == full forward recompute."""
+"""Serving: prefill + incremental decode == full forward recompute, and the
+scan-compiled decode engine (`runtime/decode_loop.py`) == the per-token
+reference loop."""
 import dataclasses
 
 import jax
@@ -11,6 +13,7 @@ from repro.core.parallel import ParallelContext
 from repro.models import layers as L
 from repro.models import serve as SV
 from repro.models import transformer as T
+from repro.runtime import decode_loop as DL
 
 
 def full_logits(cfg, params, batch):
@@ -68,6 +71,141 @@ def test_host_chunked_decode_matches_plain():
     l8, _ = SV.decode_step(cfg, par, params, cache, {"tokens": toks[:, 16:17]},
                            jnp.int32(16), n_host_chunks=8)
     np.testing.assert_allclose(np.asarray(l8), np.asarray(l0), rtol=1e-4, atol=1e-4)
+
+
+def _per_token_loop(cfg, par, params, cache, tok0, pos0, steps, n_host_chunks=0):
+    """Reference: one decode_step dispatch per token, greedy."""
+    outs, logits_all = [tok0], []
+    for i in range(steps):
+        l, cache = SV.decode_step(cfg, par, params, cache,
+                                  {"tokens": outs[-1][:, None]},
+                                  jnp.int32(pos0 + i), n_host_chunks=n_host_chunks)
+        logits_all.append(l[:, : cfg.vocab_size])
+        outs.append(jnp.argmax(l[:, : cfg.vocab_size], -1).astype(jnp.int32))
+    return jnp.stack(outs[1:], 1), jnp.stack(logits_all, 0)
+
+
+@pytest.mark.parametrize("name,chunks", [
+    ("llama3.2-1b", 0), ("llama3.2-1b", 4),        # attn, on-device + host-KV
+    ("falcon-mamba-7b", 0), ("recurrentgemma-9b", 0),  # ssm / rglru+local_attn
+])
+def test_scan_decode_matches_per_token_loop(name, chunks):
+    """decode_tokens (one lax.scan) == per-token loop: logits AND greedy ids."""
+    cfg = dataclasses.replace(reduced(get_config(name)), param_dtype="float32",
+                              remat="none")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    b, s, steps = 2, 8, 5
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    logits, cache = SV.prefill_step(cfg, None, params, {"tokens": toks}, max_len=16)
+    tok0 = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    par = ParallelContext(mesh=None) if chunks else None
+    want_ids, want_logits = _per_token_loop(cfg, par, params, cache, tok0, s,
+                                            steps, n_host_chunks=chunks)
+    got_ids, aux = DL.decode_tokens(cfg, par, params, cache, tok0[:, None],
+                                    jnp.full((b,), s, jnp.int32), num_steps=steps,
+                                    n_host_chunks=chunks, collect_logits=True)
+    assert got_ids.tolist() == want_ids.tolist()
+    np.testing.assert_allclose(np.asarray(aux["logits"]), np.asarray(want_logits),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_position_masked_prefill_matches_exact():
+    """Right-padded prefill with lengths == exact-length prefill, per row."""
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-1b")),
+                              param_dtype="float32", remat="none")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab_size)
+    lengths = [5, 9]
+    l_pad, cache = SV.prefill_step(cfg, None, params, {"tokens": toks}, max_len=16,
+                                   lengths=jnp.asarray(lengths, jnp.int32))
+    for i, n in enumerate(lengths):
+        l_exact, _ = SV.prefill_step(cfg, None, params,
+                                     {"tokens": toks[i:i + 1, :n]}, max_len=16)
+        np.testing.assert_allclose(np.asarray(l_pad[i]), np.asarray(l_exact[0]),
+                                   rtol=2e-4, atol=2e-4)
+    # padded slots must be masked out of the cache
+    kpos = cache["pos0"]["kpos"]  # [C, b, s]
+    assert (np.asarray(kpos[:, 0, 5:]) == -1).all()
+    # recurrent layouts must refuse (their states integrate pad tokens)
+    with pytest.raises(ValueError, match="position-masked"):
+        SV.prefill_step(dataclasses.replace(reduced(get_config("falcon-mamba-7b")),
+                                            param_dtype="float32", remat="none"),
+                        None, T.init_params(reduced(get_config("falcon-mamba-7b")),
+                                            jax.random.PRNGKey(0)),
+                        {"tokens": toks}, max_len=16,
+                        lengths=jnp.asarray(lengths, jnp.int32))
+
+
+def test_continuous_batching_staggered_finishes():
+    """ServeEngine (slots < requests, mixed lengths, stop token firing at
+    different steps) reproduces per-prompt solo greedy generation."""
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-1b")),
+                              param_dtype="float32", remat="none")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (3, 8, 5, 6)]
+    max_new = 6
+
+    def solo(prompt):
+        t = jnp.asarray([prompt], jnp.int32)
+        logits, cache = SV.prefill_step(cfg, None, params, {"tokens": t},
+                                        max_len=8 + max_new)
+        tok0 = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        ids, _ = _per_token_loop(cfg, None, params, cache, tok0, len(prompt),
+                                 max_new - 1)
+        return [int(tok0[0])] + [int(t) for t in ids[0]]
+
+    solos = [solo(p) for p in prompts]
+    stop = solos[0][2]  # fires at step 3 for prompt 0; elsewhere (if at all) later
+
+    def trunc(g):
+        return g[: g.index(stop) + 1] if stop in g else g
+
+    eng = DL.ServeEngine(cfg, params, slots=2, bucket=8, max_new_tokens=max_new,
+                         segment=2, stop_tokens=(stop,))
+    got = eng.generate(prompts)
+    want = [trunc(g) for g in solos]
+    assert got == want
+    assert len({len(g) for g in want}) > 1  # finishes genuinely staggered
+
+    # a stop token sampled directly from prefill logits (before any scan
+    # step) must also finish the sequence
+    stop0 = solos[2][0]
+
+    def trunc0(g):
+        return g[: g.index(stop0) + 1] if stop0 in g else g
+
+    eng0 = DL.ServeEngine(cfg, params, slots=2, bucket=8, max_new_tokens=max_new,
+                          segment=2, stop_tokens=(stop0,))
+    got0 = eng0.generate(prompts)
+    assert got0 == [trunc0(g) for g in solos]
+    assert len(got0[2]) == 1  # prompt 2 stopped on its very first token
+
+
+def test_continuous_batching_recurrent_full_bucket():
+    """Recurrent layouts can use the engine when prompts exactly fill the
+    bucket (no pads -> unmasked prefill): engine == solo generation."""
+    cfg = dataclasses.replace(reduced(get_config("falcon-mamba-7b")),
+                              param_dtype="float32", remat="none")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    bucket, max_new = 6, 4
+    prompts = [rng.integers(0, cfg.vocab_size, size=bucket).tolist()
+               for _ in range(3)]
+
+    def solo(prompt):
+        t = jnp.asarray([prompt], jnp.int32)
+        logits, cache = SV.prefill_step(cfg, None, params, {"tokens": t},
+                                        max_len=bucket + max_new)
+        tok0 = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        ids, _ = _per_token_loop(cfg, None, params, cache, tok0, bucket,
+                                 max_new - 1)
+        return [int(tok0[0])] + [int(t) for t in ids[0]]
+
+    eng = DL.ServeEngine(cfg, params, slots=2, bucket=bucket,
+                         max_new_tokens=max_new, segment=3)
+    assert eng.generate(prompts) == [solo(p) for p in prompts]
 
 
 def test_greedy_decode_loop():
