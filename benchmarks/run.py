@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m benchmarks.run           # all, CSV to stdout
   PYTHONPATH=src python -m benchmarks.run --only table1 fig11
+  PYTHONPATH=src python -m benchmarks.run --only serve --json BENCH_serve.json
+
+``--json`` additionally writes the selected suites' rows as machine-
+readable JSON (``{suite: [{name, value, derived}]}``), the format the
+``BENCH_*.json`` perf-trajectory files use so future PRs can
+regression-track numbers like serving tokens/s and p50/p95 inter-token
+latency without parsing stdout.
 
 Roofline sweeps (compile-heavy) run separately:
   python -m repro.launch.dryrun --all     -> experiments/dryrun/
@@ -10,6 +17,7 @@ Roofline sweeps (compile-heavy) run separately:
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -17,9 +25,27 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
+def _row_to_record(row: str):
+    """'bench,name,value,derived' -> {name, value, derived} (floats parsed);
+    header rows return None."""
+    parts = row.split(",")
+    if len(parts) < 3 or parts[1] in ("name", "ERROR"):
+        return None
+    name, value = parts[1], parts[2]
+    try:
+        value = float(value)
+    except ValueError:
+        pass
+    return {"name": name, "value": value,
+            "derived": parts[3] if len(parts) > 3 else ""}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write suite results as JSON (BENCH_*.json "
+                         "perf-trajectory format)")
     args = ap.parse_args()
 
     from benchmarks import compile_scaling
@@ -40,13 +66,25 @@ def main() -> None:
     }
     sel = args.only or list(suites)
     failures = 0
+    results = {}
     for name in sel:
+        records = results[name] = []  # always a list of {name, value, derived}
         try:
             for row in suites[name]():
-                print(row)
+                print(row)  # incremental — rows survive a later crash
+                rec = _row_to_record(row)
+                if rec:
+                    records.append(rec)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,{type(e).__name__}: {e}")
+            records.append({"name": "ERROR", "value": f"{type(e).__name__}: {e}",
+                            "derived": ""})
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(results, fh, indent=1)
+            fh.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -1,10 +1,12 @@
 """Continuous-batching serving example: a mixed-length prompt workload run
-through the scan-compiled decode engine (`runtime/decode_loop.ServeEngine`)
-— more prompts than slots, variable prompt lengths (position-masked
-prefill), staggered finishes (random stop token), slot reuse on completion,
-FPDT-style host-streamed KV.
+through the fused mixed-step scheduler (`runtime/decode_loop.ServeEngine`)
+— more prompts than slots, variable prompt lengths (including prompts
+LONGER than the bucket: they just take more prefill chunks), staggered
+finishes (random stop token), chunked prefill streaming into freed slots
+*while the other slots keep decoding*, FPDT-style host-streamed KV.
 
-  PYTHONPATH=src python examples/serve_batched.py --slots 4 --requests 10
+  PYTHONPATH=src python examples/serve_batched.py --slots 4 --requests 10 \
+      [--prefill-chunk 16] [--blocking]
 """
 import argparse
 import os
@@ -29,12 +31,22 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--slots", type=int, default=4, help="concurrent cache rows")
     ap.add_argument("--requests", type=int, default=10, help="queued prompts")
-    ap.add_argument("--bucket", type=int, default=48, help="prompt-length bucket")
+    ap.add_argument("--bucket", type=int, default=48,
+                    help="capacity floor for prompt length (longer prompts "
+                         "are still legal — they take more chunks)")
     ap.add_argument("--min-prompt", type=int, default=8)
+    ap.add_argument("--max-prompt", type=int, default=72,
+                    help="longest workload prompt (> bucket exercises "
+                         "multi-chunk refill)")
     ap.add_argument("--gen", type=int, default=16, help="max new tokens per request")
-    ap.add_argument("--segment", type=int, default=8, help="decode steps per scan segment")
+    ap.add_argument("--segment", type=int, default=8, help="mixed steps per dispatch")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens consumed per mixed step by a "
+                         "refilling slot (0 = auto)")
     ap.add_argument("--host-kv-chunks", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--blocking", action="store_true",
+                    help="run the stop-the-world refill baseline engine")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -42,27 +54,47 @@ def main():
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(args.seed)
 
-    # the workload: variable-length prompts, several per slot
-    lens = rng.integers(args.min_prompt, args.bucket + 1, size=args.requests)
+    # the workload: variable-length prompts, several per slot; the blocking
+    # baseline cannot take prompts longer than its bucket
+    hi = args.bucket if args.blocking else args.max_prompt
+    lens = rng.integers(args.min_prompt, hi + 1, size=args.requests)
     prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist() for n in lens]
     # a "stop token" some sequences will happen to emit -> staggered finishes
     stop = int(rng.integers(0, cfg.vocab_size))
 
     par = ParallelContext(mesh=None) if args.host_kv_chunks else None
-    engine = DL.ServeEngine(
-        cfg, params, slots=args.slots, bucket=args.bucket,
-        max_new_tokens=args.gen, segment=args.segment,
-        n_host_chunks=args.host_kv_chunks,
-        sampling=DL.SamplingConfig(temperature=args.temperature),
-        stop_tokens=(stop,), par=par)
+    if args.blocking:
+        engine = DL.BlockingServeEngine(
+            cfg, params, slots=args.slots, bucket=args.bucket,
+            max_new_tokens=args.gen, segment=args.segment,
+            n_host_chunks=args.host_kv_chunks,
+            sampling=DL.SamplingConfig(temperature=args.temperature),
+            stop_tokens=(stop,), par=par)
+    else:
+        engine = DL.ServeEngine(
+            cfg, params, slots=args.slots, bucket=args.bucket,
+            max_new_tokens=args.gen, segment=args.segment,
+            prefill_chunk=args.prefill_chunk,
+            n_host_chunks=args.host_kv_chunks,
+            sampling=DL.SamplingConfig(temperature=args.temperature),
+            stop_tokens=(stop,), par=par)
 
     t0 = time.perf_counter()
     outs = engine.generate(prompts, key=jax.random.PRNGKey(args.seed))
     dt = time.perf_counter() - t0
     total = sum(len(o) for o in outs)
-    print(f"{args.requests} requests (prompt {lens.min()}-{lens.max()} tokens) "
-          f"over {args.slots} slots, host-KV chunks={args.host_kv_chunks}: "
+    mode = "blocking baseline" if args.blocking else "fused scheduler"
+    print(f"[{mode}] {args.requests} requests (prompt {lens.min()}-{lens.max()} "
+          f"tokens) over {args.slots} slots, host-KV chunks={args.host_kv_chunks}: "
           f"{total} tokens in {dt*1e3:.0f} ms ({total/dt:.1f} tok/s incl. compile)")
+    steps = engine.last_stats["steps"][1:]
+    refill = [s["ms"] for s in steps if s["prefilling"]]
+    steady = [s["ms"] for s in steps if not s["prefilling"]]
+    if refill and steady:
+        print(f"  dispatches: {len(steps) + 1} "
+              f"({len(refill)} overlapped a refill); steady p50 "
+              f"{np.percentile(steady, 50):.2f} ms vs refill-active p95 "
+              f"{np.percentile(refill, 95):.2f} ms")
     for i, (n, o) in enumerate(zip(lens, outs)):
         fin = "stop" if o and o[-1] == stop else "budget"
         print(f"  req{i}: prompt={n:<3d} generated={len(o):<3d} [{fin}] {o[:8]}...")

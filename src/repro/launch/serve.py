@@ -10,12 +10,64 @@ entire decode and program size is flat in ``--gen`` and
 ``--host-kv-chunks``.  ``--per-token`` keeps the legacy one-jitted-call-
 per-token loop for A/B timing (and is the only mode for the audio-frame
 frontend, which feeds embeddings instead of token ids).
+
+``--engine`` switches to the continuous-batching ``ServeEngine`` (the
+fused mixed-step scheduler: chunked prefill interleaved with decode, see
+``docs/serving.md``): ``--requests`` mixed-length prompts over ``--batch``
+slots, ``--prefill-chunk`` tokens streamed into a refilling slot per step
+while the others decode.  ``--blocking`` runs the stop-the-world refill
+baseline instead for A/B.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
+
+
+def _engine_main(args):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.core.parallel import ParallelContext
+    from repro.models import transformer as T
+    from repro.runtime import decode_loop as DL
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    cfg = dataclasses.replace(cfg, remat="none")
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    lens = rng.integers(max(1, args.prompt_len // 4), args.prompt_len + 1,
+                        size=args.requests)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist() for n in lens]
+    par = ParallelContext(mesh=None) if args.host_kv_chunks else None
+    cls = DL.BlockingServeEngine if args.blocking else DL.ServeEngine
+    kw = {} if args.blocking else {"prefill_chunk": args.prefill_chunk}
+    engine = cls(cfg, params, slots=args.batch, bucket=args.prompt_len,
+                 max_new_tokens=args.gen, segment=args.segment,
+                 n_host_chunks=args.host_kv_chunks,
+                 sampling=DL.SamplingConfig(temperature=args.temperature,
+                                            top_k=args.top_k),
+                 par=par, **kw)
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts, key=jax.random.PRNGKey(args.seed))
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    name = "blocking baseline" if args.blocking else \
+        f"fused scheduler (prefill_chunk={engine.cp})"
+    print(f"[{name}] {args.requests} requests (prompt {lens.min()}-"
+          f"{lens.max()}) over {args.batch} slots: {total} tokens in "
+          f"{dt*1e3:.0f} ms ({total/dt:.1f} tok/s incl. compile)")
+    steps = engine.last_stats["steps"][1:]  # drop the compile-bearing first
+    refill = [s["ms"] for s in steps if s["prefilling"]]
+    steady = [s["ms"] for s in steps if not s["prefilling"]]
+    if refill and steady:
+        print(f"  dispatch wall-clock: steady p50 {np.percentile(steady, 50):.2f} ms, "
+              f"refill-active p95 {np.percentile(refill, 95):.2f} ms "
+              f"({len(refill)}/{len(steps)} dispatches overlapped a refill)")
 
 
 def main():
@@ -33,8 +85,22 @@ def main():
                     help="restrict sampling to the k best tokens (0 = all)")
     ap.add_argument("--per-token", action="store_true",
                     help="legacy per-token dispatch loop instead of lax.scan")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous batching via the fused mixed-step "
+                         "scheduler (ServeEngine) instead of one batch")
+    ap.add_argument("--blocking", action="store_true",
+                    help="with --engine: the stop-the-world refill baseline")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="with --engine: queued prompts")
+    ap.add_argument("--segment", type=int, default=8,
+                    help="with --engine: mixed steps per dispatch")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="with --engine: prompt tokens streamed into a "
+                         "refilling slot per mixed step (0 = auto)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.engine:
+        return _engine_main(args)
     if args.host_kv_chunks and (args.prompt_len + args.gen) % args.host_kv_chunks:
         # models/serve.py would silently fall back to on-device attention
         ap.error(f"--host-kv-chunks {args.host_kv_chunks} must divide the "

@@ -219,6 +219,54 @@ def mamba_mixer(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     return out, {"conv": conv_state, "ssm": h_last}
 
 
+def _conv_state_at(xp: jnp.ndarray, live: jnp.ndarray, k: int) -> jnp.ndarray:
+    """State-at-length gather for the causal-conv carry.
+
+    ``xp`` [b, k-1+s, c] is the conv input with the previous state
+    prepended (index i holds chunk position i-(k-1)); after consuming
+    ``live`` tokens of the chunk the carry is the k-1 inputs ending at
+    position ``live - 1``, i.e. ``xp[:, live : live+k-1]`` — per-row
+    traced, so a partial final chunk hands off the state at the TRUE
+    length instead of integrating pad tokens (``live = 0`` reproduces the
+    incoming state exactly)."""
+    b = xp.shape[0]
+    idx = live[:, None] + jnp.arange(k - 1)[None, :]  # [b, k-1]
+    return xp[jnp.arange(b)[:, None], idx]
+
+
+def mamba_chunk_step(cfg: ModelConfig, p: Params, x: jnp.ndarray, state: dict,
+                     live: jnp.ndarray):
+    """Chunked prefill step with state-at-length gather.
+
+    x [b, cp, d]; state {"conv": [b, k-1, di], "ssm": [b, di, ds]};
+    live [b] int32 — tokens of the chunk that are real (the rest is
+    right-padding).  Returns (y [b, cp, d], new_state) where ``new_state``
+    is the recurrent state after exactly ``live`` tokens: pad positions
+    are forced to identity transitions (``dt = 0`` -> a = exp(0) = 1,
+    b-term = 0) so the scan's final state IS the state at the true
+    length, and the conv carry is gathered at ``live``.  Outputs at pad
+    positions are garbage and must be masked by the caller."""
+    dtr, ds = cfg.dt_rank_actual, cfg.ssm_state
+    b, s, _ = x.shape
+    k = cfg.d_conv
+    xz = x @ p["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xp = jnp.concatenate([state["conv"].astype(xin.dtype), xin], axis=1)
+    xc = sum(xp[:, i : i + s] * p["conv_w"][i] for i in range(k)) + p["conv_b"]
+    new_conv = _conv_state_at(xp, live, k)
+    xc = jax.nn.silu(xc)
+    dbc = xc @ p["w_x"]
+    dt = jax.nn.softplus(dbc[..., :dtr] @ p["w_dt"] + p["b_dt"])
+    dead = jnp.arange(s)[None, :] >= live[:, None]  # [b, cp]
+    dt = jnp.where(dead[..., None], 0.0, dt)  # identity transition at pads
+    B = dbc[..., dtr : dtr + ds]
+    C = dbc[..., dtr + ds :]
+    y, h_last = selective_scan(xc, dt, p["A_log"], B, C, state["ssm"])
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["w_out"], {"conv": new_conv, "ssm": h_last}
+
+
 def mamba_decode_step(cfg: ModelConfig, p: Params, x: jnp.ndarray, state: dict):
     """Single-token decode. x [b, 1, d]; state carries conv + ssm."""
     dtr, ds = cfg.dt_rank_actual, cfg.ssm_state

@@ -116,6 +116,31 @@ def rglru_mixer(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     return out, {"conv": conv_state, "h": h[:, -1]}
 
 
+def rglru_chunk_step(cfg: ModelConfig, p: Params, x: jnp.ndarray, state: dict,
+                     live: jnp.ndarray):
+    """Chunked prefill step with state-at-length gather (see
+    ``mamba.mamba_chunk_step`` for the contract).  Pad positions are
+    forced to identity transitions (a = 1, gated input = 0) so the scan's
+    last state is the state after exactly ``live`` real tokens; the conv
+    carry is gathered at ``live``.  Pad-position outputs are garbage."""
+    from repro.models.mamba import _conv_state_at
+
+    b, s, _ = x.shape
+    k = cfg.d_conv
+    y = x @ p["w_y"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xp = jnp.concatenate([state["conv"].astype(y.dtype), y], axis=1)
+    y = sum(xp[:, i : i + s] * p["conv_w"][i] for i in range(k)) + p["conv_b"]
+    new_conv = _conv_state_at(xp, live, k)
+    a, gated = _gates(p, y)
+    dead = (jnp.arange(s)[None, :] >= live[:, None])[..., None]  # [b, cp, 1]
+    a = jnp.where(dead, 1.0, a)
+    gated = jnp.where(dead, 0.0, gated)
+    h = scan_ops.linear_scan(a, gated, state["h"], impl="xla")  # [b, s, di] fp32
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"conv": new_conv, "h": h[:, -1]}
+
+
 def rglru_decode_step(cfg: ModelConfig, p: Params, x: jnp.ndarray, state: dict):
     y = x @ p["w_y"]
     gate = jax.nn.gelu(x @ p["w_gate"])

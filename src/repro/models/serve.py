@@ -307,6 +307,220 @@ def decode_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params
 
 
 # ---------------------------------------------------------------------------
+# fused mixed step: one prefill chunk OR one decode token per batch row
+# ---------------------------------------------------------------------------
+
+
+def _chunk_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Params,
+                     x: jnp.ndarray, cache: Params, qpos: jnp.ndarray,
+                     live: jnp.ndarray, *, window: int = 0,
+                     n_host_chunks: int = 0):
+    """Chunk-window attention against the cache at a traced offset.
+
+    x [b, cp, d]; qpos [b, cp] the position of each window token; live [b]
+    how many leading window tokens are real (0 = row is a complete no-op).
+    Attention = online-softmax merge of (a) the PRE-write cache, masked on
+    ``kpos`` (optionally host-streamed), and (b) the window's own keys
+    under an intra-window causal mask — then the ``live`` keys are written
+    into the cache (``mode="drop"`` scatter: dead positions never land, so
+    a row with live=0 leaves its cache untouched).  ``live = 1`` is
+    exactly one decode step; ``live = cp`` is one dense prefill chunk.
+    Returns (attn out [b, cp, qd], new cache)."""
+    b, cp, _ = x.shape
+    q, k, v = L.qkv_proj(cfg, p, x)  # [b, cp, h, dh]
+    q = L.apply_rope(q, qpos, cfg.rope_theta)
+    k = L.apply_rope(k, qpos, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    if window:
+        window = min(window, S)  # ring capacity bounds the visible window
+    g = cfg.num_heads // cfg.num_kv_heads
+    qt = q.astype(jnp.float32).transpose(0, 2, 1, 3)  # [b, hq, cp, dh]
+    scale = cfg.head_dim ** -0.5
+    key_live = jnp.arange(cp)[None, :] < live[:, None]  # [b, cp]
+
+    def expand(t):
+        t = t.astype(jnp.float32)
+        return jnp.repeat(t, g, axis=2) if g > 1 else t
+
+    def attend(kc, vc, kp):
+        """Partial state [b, h, cp, dh] of the window queries vs a KV slab."""
+        ke, ve = expand(kc), expand(vc)
+        s_ = jnp.einsum("bhqd,bshd->bhqs", qt, ke) * scale
+        ok = (kp[:, None, :] >= 0) & (kp[:, None, :] <= qpos[:, :, None])
+        if window:
+            ok = ok & (kp[:, None, :] > (qpos[:, :, None] - window))
+        s_ = jnp.where(ok[:, None], s_, NEG_INF)
+        m = jnp.max(s_, axis=-1)
+        pr = jnp.where(s_ <= NEG_INF / 2, 0.0, jnp.exp(s_ - m[..., None]))
+        l = pr.sum(-1)
+        acc = jnp.einsum("bhqs,bshd->bhqd", pr, ve)
+        return SoftmaxState(acc, m, l)
+
+    def attend_intra():
+        """The window attending to its own (live, causal) keys — these are
+        not in the cache yet, which is what makes the pre-write cache pass
+        exact: no entry is double-counted, and ring-buffer eviction cannot
+        clobber history the earlier window tokens still need."""
+        ke, ve = expand(k), expand(v)
+        s_ = jnp.einsum("bhqd,bkhd->bhqk", qt, ke) * scale
+        ok = key_live[:, None, :] & (qpos[:, None, :] <= qpos[:, :, None])
+        if window:
+            ok = ok & (qpos[:, None, :] > (qpos[:, :, None] - window))
+        s_ = jnp.where(ok[:, None], s_, NEG_INF)
+        m = jnp.max(s_, axis=-1)
+        pr = jnp.where(s_ <= NEG_INF / 2, 0.0, jnp.exp(s_ - m[..., None]))
+        l = pr.sum(-1)
+        acc = jnp.einsum("bhqk,bkhd->bhqd", pr, ve)
+        return SoftmaxState(acc, m, l)
+
+    if n_host_chunks and S % n_host_chunks == 0 and not window:
+        # FPDT-for-inference, mixed-step flavor: stream the pre-write cache
+        # slab by slab (chunk body traced once — program size flat in the
+        # slab count), merge with the intra-window part at the end.
+        cs = S // n_host_chunks
+        slab_spec = None
+        if par is not None and par.mesh is not None:
+            all_axes = tuple(par.mesh.axis_names)
+            if cs % par.mesh.size == 0:
+                slab_spec = (None, all_axes, None, None)
+
+        def fetch(c):
+            kc = jax.lax.dynamic_slice_in_dim(cache["k"], c * cs, cs, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(cache["v"], c * cs, cs, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(cache["kpos"], c * cs, cs, axis=1)
+            if par is not None:
+                kc = par.to_device(kc, *(slab_spec or ()))
+                vc = par.to_device(vc, *(slab_spec or ()))
+            return kc, vc, kp
+
+        # full-attn slots fill [0, pos] in order, so a slab starting past
+        # every row's highest live position holds no valid entries
+        hi_pos = jnp.max(jnp.where(key_live, qpos, -1))
+        hist = fori_double_buffered(
+            0, n_host_chunks, fetch,
+            lambda c, buf, st: merge(st, attend(*buf)),
+            zero_state((b, cfg.num_heads, cp, cfg.head_dim)),
+            live=lambda c: (c * cs) <= hi_pos,
+        )
+    else:
+        hist = attend(cache["k"], cache["v"], cache["kpos"])
+
+    o = finalize(merge(hist, attend_intra()))  # [b, h, cp, dh]
+    o = o.transpose(0, 2, 1, 3).reshape(b, cp, cfg.q_dim).astype(x.dtype)
+    out = o @ p["wo"]
+
+    # write the live window into the cache (after attention).  Ring buffers
+    # additionally drop all but the last S (ring capacity) live tokens — the
+    # only survivors of intra-window eviction, and mutually collision-free.
+    wmask = key_live
+    if window:
+        wmask = wmask & (jnp.arange(cp)[None, :] >= (live[:, None] - S))
+        slot = qpos % S
+    else:
+        slot = qpos
+    slot = jnp.where(wmask, slot, S)  # dead/evicted -> out of bounds, dropped
+    bi = jnp.arange(b)[:, None]
+    ck = cache["k"].at[bi, slot].set(k.astype(cache["k"].dtype), mode="drop")
+    cv = cache["v"].at[bi, slot].set(v.astype(cache["v"].dtype), mode="drop")
+    kpos = cache["kpos"].at[bi, slot].set(qpos, mode="drop")
+    return out, {"k": ck, "v": cv, "kpos": kpos}
+
+
+def _chunk_block(cfg, par, kind, p, h, cache, qpos, live, n_host_chunks=0):
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        hn = L.apply_norm(cfg, p["norm1"], h)
+        o, cache = _chunk_attention(cfg, par, p["attn"], hn, cache, qpos, live,
+                                    window=window,
+                                    n_host_chunks=0 if kind == "local_attn" else n_host_chunks)
+        h = h + o
+        hn2 = L.apply_norm(cfg, p["norm2"], h)
+        if cfg.num_experts:
+            from repro.models import moe as MOE
+
+            y, _ = MOE.moe_ffn(cfg, p["moe"], hn2)
+        else:
+            y = L.mlp_block(cfg, p["mlp"], hn2)
+        return h + y, cache
+    if kind == "ssm":
+        hn = L.apply_norm(cfg, p["norm"], h)
+        y, st = M.mamba_chunk_step(cfg, p["mixer"], hn, cache, live)
+        return h + y, st
+    if kind == "rglru":
+        hn = L.apply_norm(cfg, p["norm1"], h)
+        y, st = R.rglru_chunk_step(cfg, p["mixer"], hn, cache, live)
+        h = h + y
+        hn2 = L.apply_norm(cfg, p["norm2"], h)
+        return h + L.mlp_block(cfg, p["mlp"], hn2), st
+    raise ValueError(kind)
+
+
+def chunk_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
+               cache: Params, toks: jnp.ndarray, offset, live,
+               n_host_chunks: int = 0):
+    """One fused mixed step: every batch row processes a ``cp``-token window.
+
+    Contract:
+      toks   — [b, cp] int32 window tokens.  A row consuming a prefill
+               chunk passes the chunk (``live`` real tokens, rest padding);
+               a row decoding passes its next token broadcast (``live=1``);
+               an idle row passes anything (``live=0`` — complete no-op:
+               cache, recurrent state and ring buffers are untouched).
+      offset — scalar or int32 [b]: the position of each row's first window
+               token (a prefilling row's chunk offset; a decoding row's
+               ``pos``).
+      live   — scalar or int32 [b] in [0, cp]: real tokens per row.
+      cache  — pytree from ``init_cache``; updated in place at the live
+               positions only (shape/dtype-stable — rides the mixed-step
+               ``lax.scan`` carry in ``runtime/decode_loop.py``).
+
+    Recurrent blocks (ssm / rglru / local_attn ring) are handled by the
+    *state-at-length gather*: pad positions are identity transitions and
+    the conv carry is gathered at the true length
+    (``mamba.mamba_chunk_step`` / ``rglru.rglru_chunk_step``), so
+    variable-length chunked prefill is exact for state-integrating layouts
+    — the capability that admits them into continuous batching.
+
+    Returns (logits [b, vocab] fp32 at each row's LAST live token, cache).
+    """
+    if cfg.frontend == "audio_frames":
+        raise ValueError("chunk_step feeds token ids; the audio_frames "
+                         "frontend consumes frame embeddings")
+    b, cp = toks.shape
+    offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    live = jnp.broadcast_to(jnp.asarray(live, jnp.int32), (b,))
+    qpos = offset[:, None] + jnp.arange(cp)[None, :]  # [b, cp]
+    h = params["embed"][toks].astype(jnp.dtype(cfg.param_dtype))
+    pat, n_cycles, tail = layout_of(cfg)
+
+    def cycle_body(h, scans):
+        cyc_p, cyc_cache = scans
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            h, nc = _chunk_block(cfg, par, kind, cyc_p[f"pos{i}"], h,
+                                 cyc_cache[f"pos{i}"], qpos, live, n_host_chunks)
+            new_caches[f"pos{i}"] = nc
+        return h, new_caches
+
+    h, new_cycle_caches = jax.lax.scan(
+        cycle_body, h, (params["cycles"], {k: cache[k] for k in cache if k != "tail"})
+    )
+    new_cache = dict(new_cycle_caches)
+    if tail:
+        new_tail = []
+        for i, kind in enumerate(tail):
+            h, nc = _chunk_block(cfg, par, kind, params["tail"][i], h,
+                                 cache["tail"][i], qpos, live, n_host_chunks)
+            new_tail.append(nc)
+        new_cache["tail"] = new_tail
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    li = jnp.clip(live - 1, 0, cp - 1)
+    last = h[jnp.arange(b), li]
+    logits = (last @ head_matrix(cfg, params)).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # prefill: forward + cache population
 # ---------------------------------------------------------------------------
 
@@ -369,13 +583,19 @@ def prefill_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Param
             W = min(cfg.window, max_len) if kind == "local_attn" else max_len
             ck = _attn_cache(cfg, b, W, h.dtype)
             take = min(W, s)
-            kp = jnp.broadcast_to(jnp.arange(s - take, s)[None], (b, take))
+            pvec = jnp.arange(s - take, s)
+            # ring slots MUST follow the decode invariant slot = pos % W —
+            # writing the tail at slots 0..take-1 is only equivalent when
+            # (s - take) % W == 0, and otherwise decode evicts the wrong
+            # entry (a position still inside the window)
+            slots = pvec % W if kind == "local_attn" else pvec
+            kp = jnp.broadcast_to(pvec[None], (b, take))
             if lengths is not None:  # mask pad-token slots as never-filled
                 kp = jnp.where(kp < lengths[:, None], kp, -1)
             cache = {
-                "k": ck["k"].at[:, :take].set(k[:, s - take:].astype(ck["k"].dtype)),
-                "v": ck["v"].at[:, :take].set(v[:, s - take:].astype(ck["v"].dtype)),
-                "kpos": ck["kpos"].at[:, :take].set(kp),
+                "k": ck["k"].at[:, slots].set(k[:, s - take:].astype(ck["k"].dtype)),
+                "v": ck["v"].at[:, slots].set(v[:, s - take:].astype(ck["v"].dtype)),
+                "kpos": ck["kpos"].at[:, slots].set(kp),
             }
             hn2 = L.apply_norm(cfg, p["norm2"], h)
             if cfg.num_experts:

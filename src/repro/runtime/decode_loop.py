@@ -9,10 +9,17 @@ decode against the cache); this module owns the *loop*:
   — the per-token Python loop it replaces re-dispatched a jitted call per
   token and paid host latency on every step.  Greedy and temperature/top-k
   sampling, per-sequence stop-token and budget handling.
-* ``ServeEngine`` — continuous batching on top: a fixed number of cache
-  slots, variable-length prompts prefilled position-masked into a common
-  bucket, finished sequences harvested between scan segments and their
-  slots re-used for queued prompts.
+* ``ServeEngine`` — continuous batching via the **fused mixed-step
+  scheduler**: ONE compiled program per step that, for every cache slot,
+  either consumes one prefill chunk or decodes one token, selected by a
+  per-slot traced state machine (``FREE / PREFILL / DECODE``) carried
+  through the scan — so a refilling slot's prompt streams in
+  chunk-by-chunk *under* the other slots' decode steps (ChunkFlow-style,
+  the serving-side dual of the FPDT sequence-chunk pipeline), and prompts
+  longer than the bucket are legal (they just take more chunks).
+* ``BlockingServeEngine`` — the PR 3 three-program engine (batched
+  prefill, decode segment, synchronous single-row refill prefill), kept
+  as the measured stall baseline for ``benchmarks/serve_bench.py``.
 
 Measured by ``benchmarks/serve_bench.py``; architecture notes in
 ``docs/serving.md``.
@@ -20,10 +27,12 @@ Measured by ``benchmarks/serve_bench.py``; architecture notes in
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ModelConfig
 from repro.core.parallel import ParallelContext
@@ -165,20 +174,276 @@ def insert_slot(cache: Params, one: Params, i) -> Params:
     return jax.tree_util.tree_map_with_path(put, cache, one)
 
 
+def reset_slot(cache: Params, i) -> Params:
+    """Invalidate batch slot ``i`` before chunked prefill streams a new
+    prompt into it: ``kpos`` rows go to -1 (no stale attention entries can
+    leak into the new sequence — chunk writes only cover the new prompt's
+    positions, unlike the old full-row ``insert_slot`` refill) and
+    recurrent state rows (conv/ssm/h) go to 0.  k/v payloads stay — they
+    are unreachable once ``kpos`` is -1."""
+
+    def fix(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        kind = names[-1]
+        if kind not in ("kpos", "conv", "ssm", "h"):
+            return leaf
+        ax = _batch_axis(path)
+        shape = list(leaf.shape)
+        shape[ax] = 1
+        fill = -1 if kind == "kpos" else 0
+        row = jnp.full(shape, fill, leaf.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, row, i, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+# per-slot scheduler states (traced int32)
+FREE, PREFILL, DECODE = 0, 1, 2
+
+
+def mixed_segment(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
+                  cache: Params, mode: jnp.ndarray, tok: jnp.ndarray,
+                  pos: jnp.ndarray, key: jnp.ndarray, rem: jnp.ndarray,
+                  pfill: jnp.ndarray, pend: jnp.ndarray, plen: jnp.ndarray, *,
+                  num_steps: int, prefill_chunk: int, n_host_chunks: int = 0,
+                  sampling: SamplingConfig = GREEDY,
+                  stop_tokens: Sequence[int] = (), pad_id: int = 0):
+    """Run ``num_steps`` fused mixed steps in ONE ``lax.scan``.
+
+    Per step, each slot does what its traced state says:
+      PREFILL — consume the next ``prefill_chunk``-token chunk of its
+                pending prompt (``chunk_step`` at offset ``pfill``; the
+                final partial chunk is position-masked and recurrent state
+                is gathered at the true length).  When the prompt is
+                exhausted the slot samples its first token from the chunk
+                logits, emits it, and transitions to DECODE (or straight
+                to FREE on a stop token / empty budget);
+      DECODE  — decode one token (emit, advance ``pos``, burn budget;
+                stop token or exhausted budget -> FREE);
+      FREE    — no-op (live=0 in the chunk program: nothing is written).
+
+    The step is ONE compiled program: a ``lax.cond`` between the unified
+    chunk program (any slot prefilling — decode slots ride it as live=1
+    windows) and the plain ``decode_step`` fast path (nobody prefilling —
+    steady-state decode pays zero chunk overhead).  Both branches are
+    traced once, so program size is flat in chunk length, cache capacity,
+    and step count.
+
+    Carry (shape/dtype-stable): ``(cache, mode, tok, pos, key, rem,
+    pfill)``; ``pend [b, P]``/``plen [b]`` (the staged prompts) are
+    scan-invariant.  Returns ``(emit [b, num_steps], valid [b, num_steps],
+    aux)`` where ``aux`` is the final carry as a dict — segments chain by
+    feeding it back, and the host harvests ``emit`` where ``valid``.
+    """
+    b = tok.shape[0]
+    cp = int(prefill_chunk)
+    P = pend.shape[1]
+    stop = jnp.asarray(tuple(stop_tokens), jnp.int32)
+    V = cfg.vocab_size
+
+    def step(carry, _):
+        cache, mode, tok, pos, key, rem, pfill = carry
+        key, sub = jax.random.split(key)
+        is_pf = mode == PREFILL
+
+        def chunk_branch(cache, tok):
+            off = jnp.where(is_pf, pfill, pos)
+            live = jnp.where(is_pf, jnp.clip(plen - pfill, 0, cp),
+                             jnp.where(mode == DECODE, 1, 0))
+            idx = jnp.clip(off[:, None] + jnp.arange(cp)[None, :], 0, P - 1)
+            toks = jnp.take_along_axis(pend, idx, axis=1)
+            toks = jnp.where(is_pf[:, None], toks, tok)  # decode rows: col 0 = tok
+            return SV.chunk_step(cfg, par, params, cache, toks, off, live,
+                                 n_host_chunks=n_host_chunks)
+
+        def decode_branch(cache, tok):
+            return SV.decode_step(cfg, par, params, cache, {"tokens": tok},
+                                  pos, n_host_chunks=n_host_chunks)
+
+        logits, cache = jax.lax.cond(jnp.any(is_pf), chunk_branch,
+                                     decode_branch, cache, tok)
+        nxt = sample_token(logits[:, :V], sub, sampling)
+        pfill = jnp.where(is_pf, jnp.minimum(pfill + cp, plen), pfill)
+        fin_pf = is_pf & (pfill >= plen)  # prompt exhausted THIS step
+        is_dec = mode == DECODE
+        emitting = is_dec | fin_pf
+        valid = emitting & (rem > 0)
+        emit = jnp.where(valid, nxt, pad_id)
+        rem = rem - valid.astype(jnp.int32)
+        hit_stop = valid & jnp.isin(nxt, stop)
+        now_free = emitting & (hit_stop | (rem <= 0))
+        mode = jnp.where(now_free, FREE, jnp.where(fin_pf, DECODE, mode))
+        pos = jnp.where(fin_pf, plen,
+                        jnp.where(is_dec & ~now_free, pos + 1, pos))
+        tok = jnp.where(emitting, nxt, tok[:, 0])[:, None]
+        return (cache, mode, tok, pos, key, rem, pfill), (emit, valid)
+
+    carry0 = (cache, jnp.asarray(mode, jnp.int32), tok.astype(jnp.int32),
+              jnp.asarray(pos, jnp.int32), key, jnp.asarray(rem, jnp.int32),
+              jnp.asarray(pfill, jnp.int32))
+    (cache, mode, tok, pos, key, rem, pfill), (emits, valids) = jax.lax.scan(
+        step, carry0, None, length=num_steps)
+    aux = {"cache": cache, "mode": mode, "tok": tok, "pos": pos, "key": key,
+           "rem": rem, "pfill": pfill}
+    return emits.T, valids.T, aux
+
+
 class ServeEngine:
-    """Continuous batching over ``slots`` concurrent cache rows.
+    """Continuous batching over ``slots`` concurrent cache rows, scheduled
+    by the fused mixed step (``mixed_segment``).
+
+    Queued prompts are staged into a per-slot pending buffer and streamed
+    into the cache chunk-by-chunk (``prefill_chunk`` tokens per step)
+    *while the other slots keep decoding* — refill never stops the world,
+    and any layout joins variable-length continuous batching (recurrent
+    blocks ride the state-at-length gather; see ``models/serve.py``).
+    Prompts of any length > 0 are accepted: the pending buffer and cache
+    capacity derive from ``max(bucket, longest prompt)``, so ``bucket`` is
+    the floor that keeps program shapes stable across calls, not a limit.
+
+    Exactly TWO compiled programs regardless of workload mix: the mixed
+    segment (one ``lax.scan`` of fused steps) and ``reset_slot`` (row
+    invalidation at assignment) — ``compiled_programs()`` reports the live
+    count so tests can pin it.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, *, slots: int,
+                 bucket: int, max_new_tokens: int, prefill_chunk: int = 0,
+                 n_host_chunks: int = 0, sampling: SamplingConfig = GREEDY,
+                 stop_tokens: Sequence[int] = (), pad_id: int = 0,
+                 segment: int = 8, par: Optional[ParallelContext] = None):
+        self.cfg, self.params, self.par = cfg, params, par
+        self.slots, self.bucket = slots, bucket
+        self.max_new = max_new_tokens
+        self.sampling, self.pad_id = sampling, pad_id
+        self.segment = segment
+        self.n_host_chunks = n_host_chunks
+        self.cp = int(prefill_chunk) if prefill_chunk else min(bucket, 64)
+        stop_tokens = tuple(stop_tokens)
+        self.last_stats: Dict[str, Any] = {}
+
+        def seg(cache, mode, tok, pos, key, rem, pfill, pend, plen):
+            return mixed_segment(cfg, par, params, cache, mode, tok, pos, key,
+                                 rem, pfill, pend, plen, num_steps=segment,
+                                 prefill_chunk=self.cp,
+                                 n_host_chunks=n_host_chunks,
+                                 sampling=sampling, stop_tokens=stop_tokens,
+                                 pad_id=pad_id)
+
+        self._segment = jax.jit(seg)
+        self._reset = jax.jit(reset_slot)
+
+    # -- helpers ---------------------------------------------------------
+    def compiled_programs(self) -> Dict[str, int]:
+        """Live compile count per engine program (bounded-set assertion for
+        tests: one mixed segment + one reset, no per-bucket/per-length
+        specializations within a workload)."""
+        return {"segment": self._segment._cache_size(),
+                "reset": self._reset._cache_size()}
+
+    def _validate(self, prompts: Sequence[Sequence[int]]) -> None:
+        for i, p in enumerate(prompts):
+            if len(p) == 0:
+                raise ValueError(f"prompt {i} is empty; prompts must have "
+                                 f"length > 0 (any length — prompts longer "
+                                 f"than bucket={self.bucket} just take more "
+                                 f"prefill chunks)")
+
+    def _capacity(self, prompts: Sequence[Sequence[int]]) -> Tuple[int, int]:
+        """(P, S): pending-buffer length and cache capacity for a workload —
+        the bucket floor or the longest prompt, rounded up to whole prefill
+        chunks (and S to whole host-KV slabs when streaming)."""
+        longest = max((len(p) for p in prompts), default=1)
+        P = -(-max(self.bucket, longest) // self.cp) * self.cp
+        S = P + self.max_new
+        if self.n_host_chunks:
+            S = -(-S // self.n_host_chunks) * self.n_host_chunks
+        return P, S
+
+    # -- the scheduler ---------------------------------------------------
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 key: Optional[jnp.ndarray] = None) -> List[List[int]]:
+        """Run every prompt to completion (stop token or ``max_new_tokens``),
+        re-using slots as sequences finish.  Returns one generated-token
+        list per prompt (stop token included when one fired), in order.
+
+        Per-dispatch timing/occupancy lands in ``self.last_stats`` —
+        ``steps`` is a list of ``{ms, prefilling, emitted}`` records (one
+        per segment dispatch; run with ``segment=1`` for true per-step
+        inter-token latencies), plus ``dispatches``/``resets`` counters.
+        """
+        self._validate(prompts)
+        key = jax.random.PRNGKey(0) if key is None else key
+        queue = list(enumerate(prompts))
+        out: List[List[int]] = [[] for _ in prompts]
+        B = self.slots
+        P, S = self._capacity(prompts)
+        cache = SV.init_cache(self.cfg, B, S)
+        mode = np.full(B, FREE, np.int32)
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros(B, np.int32)
+        rem = np.zeros(B, np.int32)
+        pfill = np.zeros(B, np.int32)
+        pend = np.full((B, P), self.pad_id, np.int32)
+        plen = np.ones(B, np.int32)
+        owner: List[Optional[int]] = [None] * B
+        stats: Dict[str, Any] = {"steps": [], "dispatches": 0, "resets": 0,
+                                 "capacity": S, "pending_len": P}
+
+        while True:
+            for s in range(B):
+                if owner[s] is None and queue:
+                    idx, prompt = queue.pop(0)
+                    owner[s] = idx
+                    n = len(prompt)
+                    pend[s, :n] = list(prompt)
+                    pend[s, n:] = self.pad_id
+                    plen[s], pfill[s], mode[s] = n, 0, PREFILL
+                    rem[s], pos[s], tok[s] = self.max_new, 0, self.pad_id
+                    cache = self._reset(cache, s)
+                    stats["resets"] += 1
+            if all(o is None for o in owner):
+                break
+            key, sub = jax.random.split(key)
+            n_prefilling = int((mode == PREFILL).sum())
+            t0 = time.perf_counter()
+            emits, valids, aux = self._segment(
+                cache, mode, tok, pos, sub, rem, pfill, pend, plen)
+            cache = aux["cache"]
+            mode, tok, pos, rem, pfill, em, va = (
+                np.array(x) for x in jax.device_get(
+                    (aux["mode"], aux["tok"], aux["pos"], aux["rem"],
+                     aux["pfill"], emits, valids)))
+            dt = time.perf_counter() - t0
+            stats["dispatches"] += 1
+            stats["steps"].append({"ms": dt * 1e3, "prefilling": n_prefilling,
+                                   "emitted": int(va.sum())})
+            for s in range(B):
+                if owner[s] is None:
+                    continue
+                out[owner[s]].extend(
+                    int(t) for t, v in zip(em[s], va[s]) if v)
+                if mode[s] == FREE:
+                    owner[s] = None
+        self.last_stats = stats
+        return out
+
+
+class BlockingServeEngine:
+    """The PR 3 continuous-batching engine, kept as the measured baseline
+    the fused scheduler is compared against (``benchmarks/serve_bench.py``).
 
     Prompts are right-padded into a fixed ``bucket`` length and prefilled
     position-masked (``prefill_step(..., lengths=...)``), decode runs in
     jitted ``decode_tokens`` segments of ``segment`` steps, and between
     segments finished rows are harvested and their slots re-prefilled with
     queued prompts — three compiled programs total (batched prefill,
-    single-row refill prefill, decode segment) regardless of workload mix.
+    single-row refill prefill, decode segment), but every refill STOPS THE
+    WORLD: all other slots sit idle for a full-bucket prefill.
 
     Variable prompt lengths require a pure global-attention layout (see
-    ``prefill_step``); recurrent archs can still use the engine when every
-    prompt exactly fills the bucket — no pad tokens, so prefill runs
-    unmasked (``lengths=None``) and stop tokens / budgets stagger finishes.
+    ``prefill_step``); recurrent archs can only use this engine when every
+    prompt exactly fills the bucket.  ``ServeEngine`` lifts both limits.
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, *, slots: int,
@@ -194,6 +459,7 @@ class ServeEngine:
         self.segment = segment
         stop_tokens = tuple(stop_tokens)
         self._stop_set = frozenset(int(t) for t in stop_tokens)
+        self.last_stats: Dict[str, Any] = {}
         if n_host_chunks and self.max_len % n_host_chunks:
             # models/serve.py silently falls back to on-device attention for
             # non-dividing chunk counts — the operator would be serving a
@@ -222,8 +488,12 @@ class ServeEngine:
     # -- helpers ---------------------------------------------------------
     def _pad(self, rows: List[List[int]]) -> Tuple[jnp.ndarray, jnp.ndarray]:
         lengths = [len(r) for r in rows]
-        assert all(0 < n <= self.bucket for n in lengths), \
-            f"prompt lengths {lengths} must be in (0, bucket={self.bucket}]"
+        for i, n in enumerate(lengths):
+            if not 0 < n <= self.bucket:
+                raise ValueError(
+                    f"prompt {i} has length {n}; the blocking engine "
+                    f"requires lengths in (0, bucket={self.bucket}] — use "
+                    f"ServeEngine for longer prompts (chunked prefill)")
         toks = jnp.asarray(
             [list(r) + [self.pad_id] * (self.bucket - len(r)) for r in rows],
             jnp.int32)
@@ -239,6 +509,7 @@ class ServeEngine:
         queue = list(enumerate(prompts))
         out: List[List[int]] = [[] for _ in prompts]
         B = self.slots
+        stats: Dict[str, Any] = {"steps": [], "dispatches": 0, "refills": 0}
 
         # initial fill: pad the first B prompts into one batched prefill;
         # short queues fill trailing slots with a dummy row that starts done
@@ -250,6 +521,7 @@ class ServeEngine:
         # recurrent layouts can take, since prefill_step refuses lengths=...
         no_pads = all(len(r) == self.bucket for r in rows)
         logits, cache = self._prefill(toks, None if no_pads else lengths)
+        stats["dispatches"] += 1
         key, sub = jax.random.split(key)
         tok = sample_token(logits[:, : self.cfg.vocab_size], sub, self.sampling)
         owner: List[Optional[int]] = [i for i, _ in first] + [None] * (B - len(first))
@@ -267,6 +539,8 @@ class ServeEngine:
         tok = tok[:, None]
 
         while not all(o is None for o in owner):
+            t0 = time.perf_counter()
+            n_refills = 0
             rem_before = rem
             toks_seg, aux = self._decode(cache, tok, pos, key, done, rem)
             cache, tok, pos, key = aux["cache"], aux["tok"], aux["pos"], aux["key"]
@@ -274,6 +548,7 @@ class ServeEngine:
             emitted = jax.device_get(rem_before - rem)
             seg_host = jax.device_get(toks_seg)
             done_host = jax.device_get(done)
+            stats["dispatches"] += 1
             for s in range(B):
                 if owner[s] is None:
                     continue
@@ -283,20 +558,29 @@ class ServeEngine:
                 if not queue:  # finished, nothing queued: park the slot
                     owner[s] = None
                     continue
-                # slot reuse: single-row position-masked prefill + insert
+                # slot reuse: single-row position-masked prefill + insert —
+                # synchronous: every other slot stalls for the full prefill
                 idx, prompt = queue.pop(0)
                 toks1, len1 = self._pad([list(prompt)])
                 logits1, cache1 = self._prefill(
                     toks1, None if len(prompt) == self.bucket else len1)
                 key, sub = jax.random.split(key)
-                t0 = sample_token(logits1[:, : self.cfg.vocab_size], sub,
-                                  self.sampling)
+                t0tok = sample_token(logits1[:, : self.cfg.vocab_size], sub,
+                                     self.sampling)
                 cache = self._insert(cache, cache1, s)
+                n_refills += 1
+                stats["dispatches"] += 2
                 owner[s] = idx
-                out[idx].append(int(t0[0]))
-                tok = tok.at[s].set(t0)
+                out[idx].append(int(t0tok[0]))
+                tok = tok.at[s].set(t0tok)
                 pos = pos.at[s].set(len1[0])
-                done = done.at[s].set(int(t0[0]) in self._stop_set
+                done = done.at[s].set(int(t0tok[0]) in self._stop_set
                                       or self.max_new <= 1)
                 rem = rem.at[s].set(self.max_new - 1)
+            jax.block_until_ready(tok)
+            stats["refills"] += n_refills
+            stats["steps"].append({"ms": (time.perf_counter() - t0) * 1e3,
+                                   "prefilling": n_refills,
+                                   "emitted": int(emitted.sum())})
+        self.last_stats = stats
         return out
