@@ -63,6 +63,7 @@ def main() -> None:
         "kernels": kernels_bench.run,
         "compile_scaling": compile_scaling.run,
         "serve": serve_bench.run,
+        "paged": serve_bench.run_paged,
     }
     sel = args.only or list(suites)
     failures = 0

@@ -7,6 +7,15 @@ finishes (random stop token), chunked prefill streaming into freed slots
 
   PYTHONPATH=src python examples/serve_batched.py --slots 4 --requests 10 \
       [--prefill-chunk 16] [--blocking]
+
+``--paged`` runs the same workload through the slot-shared paged KV pool
+(`runtime/paged.py`); add ``--shared-prefix N`` for the shared-system-
+prompt variant — every request starts with the same N tokens, so the
+radix tree maps the prefix pages copy-free and only the distinct
+suffixes are prefilled (prefix-hit and page-occupancy stats printed):
+
+  PYTHONPATH=src python examples/serve_batched.py --paged \
+      --shared-prefix 128 --page-size 16 --slots 4 --requests 10
 """
 import argparse
 import os
@@ -47,6 +56,15 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--blocking", action="store_true",
                     help="run the stop-the-world refill baseline engine")
+    ap.add_argument("--paged", action="store_true",
+                    help="slot-shared paged KV pool with radix prefix reuse")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="with --paged: tokens per pool page")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="with --paged: pool pages (0 = dense-equivalent)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="shared system prompt length prepended to every "
+                         "request (with --paged: radix prefix hits)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -54,37 +72,44 @@ def main():
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(args.seed)
 
-    # the workload: variable-length prompts, several per slot; the blocking
-    # baseline cannot take prompts longer than its bucket
+    # the workload: variable-length prompts, several per slot (the blocking
+    # baseline cannot take prompts longer than its bucket), optionally all
+    # opening with the same system prompt
+    shared = rng.integers(0, cfg.vocab_size, size=args.shared_prefix).tolist()
     hi = args.bucket if args.blocking else args.max_prompt
     lens = rng.integers(args.min_prompt, hi + 1, size=args.requests)
-    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist() for n in lens]
+    prompts = [shared + rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in lens]
     # a "stop token" some sequences will happen to emit -> staggered finishes
     stop = int(rng.integers(0, cfg.vocab_size))
 
     par = ParallelContext(mesh=None) if args.host_kv_chunks else None
-    if args.blocking:
-        engine = DL.BlockingServeEngine(
-            cfg, params, slots=args.slots, bucket=args.bucket,
-            max_new_tokens=args.gen, segment=args.segment,
-            n_host_chunks=args.host_kv_chunks,
-            sampling=DL.SamplingConfig(temperature=args.temperature),
-            stop_tokens=(stop,), par=par)
+    kw = dict(slots=args.slots, bucket=args.bucket + args.shared_prefix,
+              max_new_tokens=args.gen, segment=args.segment,
+              n_host_chunks=args.host_kv_chunks,
+              sampling=DL.SamplingConfig(temperature=args.temperature),
+              stop_tokens=(stop,), par=par)
+    if args.paged:
+        from repro.runtime.paged import PagedServeEngine
+
+        engine = PagedServeEngine(cfg, params, prefill_chunk=args.prefill_chunk,
+                                  page_size=args.page_size,
+                                  n_pages=args.n_pages, **kw)
+        mode = f"paged pool (page_size={engine.page_size}, n_pages={engine.n_pages})"
+    elif args.blocking:
+        engine = DL.BlockingServeEngine(cfg, params, **kw)
+        mode = "blocking baseline"
     else:
-        engine = DL.ServeEngine(
-            cfg, params, slots=args.slots, bucket=args.bucket,
-            max_new_tokens=args.gen, segment=args.segment,
-            prefill_chunk=args.prefill_chunk,
-            n_host_chunks=args.host_kv_chunks,
-            sampling=DL.SamplingConfig(temperature=args.temperature),
-            stop_tokens=(stop,), par=par)
+        engine = DL.ServeEngine(cfg, params, prefill_chunk=args.prefill_chunk,
+                                **kw)
+        mode = "fused scheduler"
 
     t0 = time.perf_counter()
     outs = engine.generate(prompts, key=jax.random.PRNGKey(args.seed))
     dt = time.perf_counter() - t0
     total = sum(len(o) for o in outs)
-    mode = "blocking baseline" if args.blocking else "fused scheduler"
-    print(f"[{mode}] {args.requests} requests (prompt {lens.min()}-{lens.max()} "
+    print(f"[{mode}] {args.requests} requests (prompt {lens.min()}-{lens.max()}"
+          f"{f' +{args.shared_prefix} shared' if args.shared_prefix else ''} "
           f"tokens) over {args.slots} slots, host-KV chunks={args.host_kv_chunks}: "
           f"{total} tokens in {dt*1e3:.0f} ms ({total/dt:.1f} tok/s incl. compile)")
     steps = engine.last_stats["steps"][1:]
@@ -95,9 +120,20 @@ def main():
               f"({len(refill)} overlapped a refill); steady p50 "
               f"{np.percentile(steady, 50):.2f} ms vs refill-active p95 "
               f"{np.percentile(refill, 95):.2f} ms")
+    if args.paged:
+        st = engine.last_stats
+        hit = st["prefix_hit_tokens"] / max(st["prompt_tokens"], 1)
+        print(f"  prefix reuse: {st['prefix_hit_tokens']}/{st['prompt_tokens']} "
+              f"prompt tokens served from shared pages ({hit:.0%} hit rate), "
+              f"{st['prefilled_tokens']} prefilled, {st['cow_copies']} COW "
+              f"copies, {st['deferrals']} deferrals")
+        print(f"  page occupancy: peak {st['pages_peak']}/{engine.n_pages} "
+              f"pages (page_size={engine.page_size}); {st['radix_pages']} "
+              f"pages retained in the radix tree for future requests")
     for i, (n, o) in enumerate(zip(lens, outs)):
         fin = "stop" if o and o[-1] == stop else "budget"
-        print(f"  req{i}: prompt={n:<3d} generated={len(o):<3d} [{fin}] {o[:8]}...")
+        print(f"  req{i}: prompt={n + args.shared_prefix:<3d} "
+              f"generated={len(o):<3d} [{fin}] {o[:8]}...")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,12 @@ fused mixed-step scheduler: chunked prefill interleaved with decode, see
 ``docs/serving.md``): ``--requests`` mixed-length prompts over ``--batch``
 slots, ``--prefill-chunk`` tokens streamed into a refilling slot per step
 while the others decode.  ``--blocking`` runs the stop-the-world refill
-baseline instead for A/B.
+baseline instead for A/B.  ``--paged`` swaps the dense per-slot cache for
+the slot-shared paged pool with radix prefix reuse
+(``runtime/paged.py``): ``--page-size`` tokens per page, ``--n-pages``
+physical pages (0 = dense-equivalent), ``--shared-prefix`` prepends a
+common system prompt to every request to exercise the radix hits, and
+the run reports prefix-hit and page-occupancy stats.
 """
 from __future__ import annotations
 
@@ -40,26 +45,39 @@ def _engine_main(args):
     cfg = dataclasses.replace(cfg, remat="none")
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size, size=args.shared_prefix).tolist()
     lens = rng.integers(max(1, args.prompt_len // 4), args.prompt_len + 1,
                         size=args.requests)
-    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist() for n in lens]
+    prompts = [shared + rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in lens]
     par = ParallelContext(mesh=None) if args.host_kv_chunks else None
-    cls = DL.BlockingServeEngine if args.blocking else DL.ServeEngine
-    kw = {} if args.blocking else {"prefill_chunk": args.prefill_chunk}
-    engine = cls(cfg, params, slots=args.batch, bucket=args.prompt_len,
-                 max_new_tokens=args.gen, segment=args.segment,
-                 n_host_chunks=args.host_kv_chunks,
-                 sampling=DL.SamplingConfig(temperature=args.temperature,
-                                            top_k=args.top_k),
-                 par=par, **kw)
+    bucket = args.prompt_len + args.shared_prefix
+    kw = dict(slots=args.batch, bucket=bucket, max_new_tokens=args.gen,
+              segment=args.segment, n_host_chunks=args.host_kv_chunks,
+              sampling=DL.SamplingConfig(temperature=args.temperature,
+                                         top_k=args.top_k), par=par)
+    if args.paged:
+        from repro.runtime.paged import PagedServeEngine
+
+        engine = PagedServeEngine(cfg, params, prefill_chunk=args.prefill_chunk,
+                                  page_size=args.page_size,
+                                  n_pages=args.n_pages, **kw)
+        name = (f"paged pool (page_size={engine.page_size}, "
+                f"n_pages={engine.n_pages}, prefill_chunk={engine.cp})")
+    elif args.blocking:
+        engine = DL.BlockingServeEngine(cfg, params, **kw)
+        name = "blocking baseline"
+    else:
+        engine = DL.ServeEngine(cfg, params, prefill_chunk=args.prefill_chunk,
+                                **kw)
+        name = f"fused scheduler (prefill_chunk={engine.cp})"
     t0 = time.perf_counter()
     outs = engine.generate(prompts, key=jax.random.PRNGKey(args.seed))
     dt = time.perf_counter() - t0
     total = sum(len(o) for o in outs)
-    name = "blocking baseline" if args.blocking else \
-        f"fused scheduler (prefill_chunk={engine.cp})"
     print(f"[{name}] {args.requests} requests (prompt {lens.min()}-"
-          f"{lens.max()}) over {args.batch} slots: {total} tokens in "
+          f"{lens.max()}{f' +{args.shared_prefix} shared' if args.shared_prefix else ''}) "
+          f"over {args.batch} slots: {total} tokens in "
           f"{dt*1e3:.0f} ms ({total/dt:.1f} tok/s incl. compile)")
     steps = engine.last_stats["steps"][1:]  # drop the compile-bearing first
     refill = [s["ms"] for s in steps if s["prefilling"]]
@@ -68,6 +86,15 @@ def _engine_main(args):
         print(f"  dispatch wall-clock: steady p50 {np.percentile(steady, 50):.2f} ms, "
               f"refill-active p95 {np.percentile(refill, 95):.2f} ms "
               f"({len(refill)}/{len(steps)} dispatches overlapped a refill)")
+    if args.paged:
+        st = engine.last_stats
+        hit = st["prefix_hit_tokens"] / max(st["prompt_tokens"], 1)
+        print(f"  paged pool: prefix hits {st['prefix_hit_tokens']}/"
+              f"{st['prompt_tokens']} prompt tokens ({hit:.0%}), "
+              f"{st['prefilled_tokens']} prefilled, "
+              f"{st['cow_copies']} COW copies, peak occupancy "
+              f"{st['pages_peak']}/{engine.n_pages} pages "
+              f"({st['radix_pages']} retained in the radix tree)")
 
 
 def main():
@@ -97,6 +124,17 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="with --engine: prompt tokens streamed into a "
                          "refilling slot per mixed step (0 = auto)")
+    ap.add_argument("--paged", action="store_true",
+                    help="with --engine: slot-shared paged KV pool with "
+                         "radix-tree prefix reuse (runtime/paged.py)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="with --paged: tokens per pool page")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="with --paged: physical pages in the pool "
+                         "(0 = dense-equivalent capacity)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="with --engine: prepend a common system prompt of "
+                         "this many tokens to every request (radix hits)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.engine:

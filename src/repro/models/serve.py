@@ -23,6 +23,20 @@ pipeline the training path uses, so decode program size is flat in the
 chunk count and dead (unfilled) chunks skip both the host fetch and the
 merge.  This is the FPDT pipeline applied to inference (the EXTRA
 long_500k cell); see ``docs/serving.md``.
+
+Paged layout (``init_paged_cache`` + ``table=...`` on the step entry
+points): full-attention blocks swap the per-slot ``[b, S]`` rows for one
+slot-SHARED page pool ``pk``/``pv`` ``[n_pages+1, page_size, hkv, dh]``
+(+ ``pkpos [n_pages+1, page_size]`` filled positions) indexed through a
+per-slot page table ``[b, max_pages] int32`` owned by
+``runtime/paged.py``: entry ``-1`` = unmapped (masked out of attention),
+and the extra physical page (index ``n_pages``, the *trash* page) is
+where a FREE slot's table row points so its dummy decode writes land
+harmlessly.  Two slots may map the same physical page (radix prefix
+reuse) — reads are free to share; the manager guarantees written pages
+are exclusively owned (copy-on-write).  Recurrent states and local_attn
+rings stay per-slot dense — they are O(1)/O(window) per slot, paging
+buys nothing.
 """
 from __future__ import annotations
 
@@ -93,6 +107,45 @@ def init_cache(cfg: ModelConfig, b: int, max_len: int) -> Params:
     }
     if tail:
         cache["tail"] = [_block_cache(cfg, kind, b, max_len, dtype) for kind in tail]
+    return cache
+
+
+def _paged_attn_cache(cfg: ModelConfig, n_pages: int, page_size: int, dtype):
+    """Slot-shared page pool for one attention layer.  ``n_pages + 1``
+    physical pages: the last one is the TRASH page — FREE slots' table rows
+    point every logical page at it, so their dummy decode writes land
+    somewhere harmless; it is never mapped by a live slot.  ``pkpos = -1``
+    marks unfilled page entries, exactly like the dense ``kpos``."""
+    return {
+        "pk": jnp.zeros((n_pages + 1, page_size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pv": jnp.zeros((n_pages + 1, page_size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pkpos": jnp.full((n_pages + 1, page_size), -1, jnp.int32),
+    }
+
+
+def init_paged_cache(cfg: ModelConfig, b: int, n_pages: int, page_size: int) -> Params:
+    """Paged twin of ``init_cache``: full-attention blocks share ONE page
+    pool across all ``b`` slots (memory scales with pages actually used,
+    not ``slots x worst-case length``; pages are mapped per slot through
+    the ``runtime/paged.py`` page table, and a shared prompt prefix maps
+    the same physical pages copy-free).  local_attn rings and recurrent
+    ssm/rglru states keep their per-slot dense layouts."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    pat, n_cycles, tail = layout_of(cfg)
+    cap = n_pages * page_size  # pool token capacity bounds the ring window
+
+    def make(kind):
+        if kind == "attn":
+            return _paged_attn_cache(cfg, n_pages, page_size, dtype)
+        return _block_cache(cfg, kind, b, cap, dtype)
+
+    def stack(kind):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_cycles, *x.shape)),
+                            make(kind))
+
+    cache = {f"pos{i}": stack(kind) for i, kind in enumerate(pat)}
+    if tail:
+        cache["tail"] = [make(kind) for kind in tail]
     return cache
 
 
@@ -219,13 +272,120 @@ def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Param
     return out, new_cache
 
 
-def _decode_block(cfg, par, kind, p, h, cache, pos, n_host_chunks=0):
+def _paged_write_ids(table: jnp.ndarray, pos: jnp.ndarray, page_size: int,
+                     n_phys: int):
+    """(physical page, in-page offset) for writing at ``pos`` through the
+    page table.  Negative (unmapped) entries are redirected out of bounds
+    so a ``mode="drop"`` scatter skips them — live positions are always
+    mapped (the manager allocates a slot's full reserve at admit)."""
+    max_pages = table.shape[1]
+    j = jnp.minimum(pos // page_size, max_pages - 1)
+    pid = jnp.take_along_axis(table, j.reshape(table.shape[0], -1), axis=1)
+    pid = pid.reshape(pos.shape)
+    pid = jnp.where(pid < 0, n_phys, pid)  # never wrap: OOB -> dropped
+    return pid, pos % page_size
+
+
+def _paged_gather(ck, cv, kpos, table, j):
+    """Fetch logical page ``j`` of every slot: ([b, ps, hkv, dh]) k/v, the
+    page's filled positions, and the page-mapped mask (``-1`` table entries
+    clamp to page 0 for the gather and are masked out here)."""
+    pid = table[:, j]
+    safe = jnp.clip(pid, 0, None)
+    kc = jnp.take(ck, safe, axis=0)
+    vc = jnp.take(cv, safe, axis=0)
+    kp = jnp.take(kpos, safe, axis=0)
+    okp = jnp.broadcast_to((pid >= 0)[:, None], kp.shape)
+    return kc, vc, kp, okp
+
+
+def _decode_attention_paged(cfg: ModelConfig, par: Optional[ParallelContext],
+                            p: Params, x: jnp.ndarray, cache: Params, pos,
+                            table: jnp.ndarray, *, n_host_chunks: int = 0):
+    """Paged twin of ``_decode_attention``: K/V are gathered through the
+    per-slot page table instead of sliced from a dense ``[b, S]`` row.
+
+    x [b, 1, d]; pos scalar or [b]; table [b, max_pages] int32 (physical
+    page of each logical page; -1 = unmapped -> masked; FREE rows point at
+    the trash page).  With ``n_host_chunks > 0`` the pool is host-resident
+    and pages stream device-ward one logical page at a time through
+    ``fori_double_buffered`` — the same scan-carry Fig. 6 pipeline as the
+    dense host-chunked path, so program size is flat in BOTH ``n_pages``
+    and ``max_pages``; with 0 the whole mapped range is gathered at once
+    (on-device fast path, bit-comparable to dense attention).
+    Returns (attn_out [b, 1, qd], new pool leaves)."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = L.qkv_proj(cfg, p, x)  # [b, 1, h, dh]
+    q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+    n_phys, ps = cache["pkpos"].shape
+    max_pages = table.shape[1]
+    pid_w, off = _paged_write_ids(table, pos, ps, n_phys)  # [b], [b]
+    ck = cache["pk"].at[pid_w, off].set(k[:, 0].astype(cache["pk"].dtype), mode="drop")
+    cv = cache["pv"].at[pid_w, off].set(v[:, 0].astype(cache["pv"].dtype), mode="drop")
+    kpos = cache["pkpos"].at[pid_w, off].set(pos, mode="drop")
+
+    g = cfg.num_heads // cfg.num_kv_heads
+    qf = q[:, 0].astype(jnp.float32)  # [b, hq, dh]
+    scale = cfg.head_dim ** -0.5
+
+    def attend(kc, vc, kp, okp):
+        """Partial state of q against a gathered page run; ``okp`` masks
+        entries whose logical page is unmapped in this slot's table."""
+        ke = jnp.repeat(kc.astype(jnp.float32), g, axis=2) if g > 1 else kc.astype(jnp.float32)
+        ve = jnp.repeat(vc.astype(jnp.float32), g, axis=2) if g > 1 else vc.astype(jnp.float32)
+        s = jnp.einsum("bhd,bshd->bhs", qf, ke) * scale
+        ok = okp & (kp >= 0) & (kp <= pos[:, None])
+        s = jnp.where(ok[:, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        pr = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m[..., None]))
+        l = pr.sum(-1)
+        acc = jnp.einsum("bhs,bshd->bhd", pr, ve)
+        return SoftmaxState(acc[:, :, None, :], m[:, :, None], l[:, :, None])
+
+    if n_host_chunks:
+        # two-tier pool: cold pages live host-side; stream one logical page
+        # per iteration, fetch j+1 issued before page j's merge (Fig. 6)
+        def fetch(j):
+            kc, vc, kp, okp = _paged_gather(ck, cv, kpos, table, j)
+            if par is not None:
+                kc = par.to_device(kc)
+                vc = par.to_device(vc)
+            return kc, vc, kp, okp
+
+        hi_pos = jnp.max(pos)
+        state = fori_double_buffered(
+            0, max_pages, fetch,
+            lambda j, buf, st: merge(st, attend(*buf)),
+            zero_state((b, cfg.num_heads, 1, cfg.head_dim)),
+            live=lambda j: (j * ps) <= hi_pos,
+        )
+        o = finalize(state)[:, :, 0]  # [b, h, d]
+    else:
+        safe = jnp.clip(table, 0, None)  # [b, max_pages]
+        kall = jnp.take(ck, safe, axis=0).reshape(b, max_pages * ps, *ck.shape[2:])
+        vall = jnp.take(cv, safe, axis=0).reshape(b, max_pages * ps, *cv.shape[2:])
+        kpall = jnp.take(kpos, safe, axis=0).reshape(b, max_pages * ps)
+        okall = jnp.repeat(table >= 0, ps, axis=1)
+        o = finalize(attend(kall, vall, kpall, okall))[:, :, 0]
+    o = o.reshape(b, 1, cfg.q_dim).astype(x.dtype)
+    out = o @ p["wo"]
+    return out, {"pk": ck, "pv": cv, "pkpos": kpos}
+
+
+def _decode_block(cfg, par, kind, p, h, cache, pos, n_host_chunks=0, table=None):
     if kind in ("attn", "local_attn"):
         window = cfg.window if kind == "local_attn" else 0
         hn = L.apply_norm(cfg, p["norm1"], h)
-        o, cache = _decode_attention(cfg, par, p["attn"], hn, cache, pos,
-                                     window=window,
-                                     n_host_chunks=0 if kind == "local_attn" else n_host_chunks)
+        if table is not None and "pk" in cache:  # paged pool (attn only)
+            o, cache = _decode_attention_paged(cfg, par, p["attn"], hn, cache,
+                                               pos, table,
+                                               n_host_chunks=n_host_chunks)
+        else:
+            o, cache = _decode_attention(cfg, par, p["attn"], hn, cache, pos,
+                                         window=window,
+                                         n_host_chunks=0 if kind == "local_attn" else n_host_chunks)
         h = h + o
         hn2 = L.apply_norm(cfg, p["norm2"], h)
         if cfg.num_experts:
@@ -250,7 +410,7 @@ def _decode_block(cfg, par, kind, p, h, cache, pos, n_host_chunks=0):
 
 def decode_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
                 cache: Params, inp: Dict[str, jnp.ndarray], pos,
-                n_host_chunks: int = 0):
+                n_host_chunks: int = 0, table: Optional[jnp.ndarray] = None):
     """One decode step: advance every sequence in the batch by one token.
 
     Contract:
@@ -266,6 +426,9 @@ def decode_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params
                a ``lax.scan`` carry — see ``runtime/decode_loop.py``).
       n_host_chunks — stream each attention layer's KV in this many chunks
                through ``fori_double_buffered`` (0 = on-device attention).
+      table  — optional [b, max_pages] int32 page table: attention blocks
+               read/write the slot-shared paged pool through it
+               (``init_paged_cache`` layout; see ``runtime/paged.py``).
 
     Returns (logits [b, vocab] fp32, new cache)."""
     if cfg.frontend == "audio_frames":
@@ -286,7 +449,8 @@ def decode_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params
         new_caches = {}
         for i, kind in enumerate(pat):
             h, nc = _decode_block(cfg, par, kind, cyc_p[f"pos{i}"], h,
-                                  cyc_cache[f"pos{i}"], pos, n_host_chunks)
+                                  cyc_cache[f"pos{i}"], pos, n_host_chunks,
+                                  table)
             new_caches[f"pos{i}"] = nc
         return h, new_caches
 
@@ -298,7 +462,7 @@ def decode_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params
         new_tail = []
         for i, kind in enumerate(tail):
             h, nc = _decode_block(cfg, par, kind, params["tail"][i], h,
-                                  cache["tail"][i], pos, n_host_chunks)
+                                  cache["tail"][i], pos, n_host_chunks, table)
             new_tail.append(nc)
         new_cache["tail"] = new_tail
     h = L.apply_norm(cfg, params["final_norm"], h)
@@ -426,13 +590,111 @@ def _chunk_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Params
     return out, {"k": ck, "v": cv, "kpos": kpos}
 
 
-def _chunk_block(cfg, par, kind, p, h, cache, qpos, live, n_host_chunks=0):
+def _chunk_attention_paged(cfg: ModelConfig, par: Optional[ParallelContext],
+                           p: Params, x: jnp.ndarray, cache: Params,
+                           qpos: jnp.ndarray, live: jnp.ndarray,
+                           table: jnp.ndarray, *, n_host_chunks: int = 0):
+    """Paged twin of ``_chunk_attention``: the history pass gathers the
+    PRE-write pool through the page table (page by page, host-streamed,
+    when ``n_host_chunks > 0``; one gather otherwise), the intra-window
+    pass is identical to dense, and the live window tokens scatter back
+    through the table (dead positions -> out-of-bounds, dropped).  Shared
+    (radix) pages are only ever read — the page manager guarantees every
+    written page is exclusively owned (COW).  Returns
+    (attn out [b, cp, qd], new pool leaves)."""
+    b, cp, _ = x.shape
+    q, k, v = L.qkv_proj(cfg, p, x)  # [b, cp, h, dh]
+    q = L.apply_rope(q, qpos, cfg.rope_theta)
+    k = L.apply_rope(k, qpos, cfg.rope_theta)
+    n_phys, ps = cache["pkpos"].shape
+    max_pages = table.shape[1]
+    g = cfg.num_heads // cfg.num_kv_heads
+    qt = q.astype(jnp.float32).transpose(0, 2, 1, 3)  # [b, hq, cp, dh]
+    scale = cfg.head_dim ** -0.5
+    key_live = jnp.arange(cp)[None, :] < live[:, None]  # [b, cp]
+
+    def expand(t):
+        t = t.astype(jnp.float32)
+        return jnp.repeat(t, g, axis=2) if g > 1 else t
+
+    def attend(kc, vc, kp, okp):
+        """Window queries vs a gathered page run; ``okp`` masks entries of
+        unmapped logical pages."""
+        ke, ve = expand(kc), expand(vc)
+        s_ = jnp.einsum("bhqd,bshd->bhqs", qt, ke) * scale
+        ok = okp[:, None, :] & (kp[:, None, :] >= 0) & (kp[:, None, :] <= qpos[:, :, None])
+        s_ = jnp.where(ok[:, None], s_, NEG_INF)
+        m = jnp.max(s_, axis=-1)
+        pr = jnp.where(s_ <= NEG_INF / 2, 0.0, jnp.exp(s_ - m[..., None]))
+        l = pr.sum(-1)
+        acc = jnp.einsum("bhqs,bshd->bhqd", pr, ve)
+        return SoftmaxState(acc, m, l)
+
+    def attend_intra():
+        """The window vs its own (live, causal) keys — not yet in the pool,
+        so the pre-write history pass double-counts nothing."""
+        ke, ve = expand(k), expand(v)
+        s_ = jnp.einsum("bhqd,bkhd->bhqk", qt, ke) * scale
+        ok = key_live[:, None, :] & (qpos[:, None, :] <= qpos[:, :, None])
+        s_ = jnp.where(ok[:, None], s_, NEG_INF)
+        m = jnp.max(s_, axis=-1)
+        pr = jnp.where(s_ <= NEG_INF / 2, 0.0, jnp.exp(s_ - m[..., None]))
+        l = pr.sum(-1)
+        acc = jnp.einsum("bhqk,bkhd->bhqd", pr, ve)
+        return SoftmaxState(acc, m, l)
+
+    if n_host_chunks:
+        def fetch(j):
+            kc, vc, kp, okp = _paged_gather(cache["pk"], cache["pv"],
+                                            cache["pkpos"], table, j)
+            if par is not None:
+                kc = par.to_device(kc)
+                vc = par.to_device(vc)
+            return kc, vc, kp, okp
+
+        hi_pos = jnp.max(jnp.where(key_live, qpos, -1))
+        hist = fori_double_buffered(
+            0, max_pages, fetch,
+            lambda j, buf, st: merge(st, attend(*buf)),
+            zero_state((b, cfg.num_heads, cp, cfg.head_dim)),
+            live=lambda j: (j * ps) <= hi_pos,
+        )
+    else:
+        safe = jnp.clip(table, 0, None)
+        kall = jnp.take(cache["pk"], safe, axis=0).reshape(
+            b, max_pages * ps, *cache["pk"].shape[2:])
+        vall = jnp.take(cache["pv"], safe, axis=0).reshape(
+            b, max_pages * ps, *cache["pv"].shape[2:])
+        kpall = jnp.take(cache["pkpos"], safe, axis=0).reshape(b, max_pages * ps)
+        okall = jnp.repeat(table >= 0, ps, axis=1)
+        hist = attend(kall, vall, kpall, okall)
+
+    o = finalize(merge(hist, attend_intra()))  # [b, h, cp, dh]
+    o = o.transpose(0, 2, 1, 3).reshape(b, cp, cfg.q_dim).astype(x.dtype)
+    out = o @ p["wo"]
+
+    # write the live window through the table (after attention)
+    pid_w, off = _paged_write_ids(table, qpos, ps, n_phys)  # [b, cp] each
+    pid_w = jnp.where(key_live, pid_w, n_phys)  # dead -> OOB, dropped
+    ck = cache["pk"].at[pid_w, off].set(k.astype(cache["pk"].dtype), mode="drop")
+    cv = cache["pv"].at[pid_w, off].set(v.astype(cache["pv"].dtype), mode="drop")
+    kpos = cache["pkpos"].at[pid_w, off].set(qpos, mode="drop")
+    return out, {"pk": ck, "pv": cv, "pkpos": kpos}
+
+
+def _chunk_block(cfg, par, kind, p, h, cache, qpos, live, n_host_chunks=0,
+                 table=None):
     if kind in ("attn", "local_attn"):
         window = cfg.window if kind == "local_attn" else 0
         hn = L.apply_norm(cfg, p["norm1"], h)
-        o, cache = _chunk_attention(cfg, par, p["attn"], hn, cache, qpos, live,
-                                    window=window,
-                                    n_host_chunks=0 if kind == "local_attn" else n_host_chunks)
+        if table is not None and "pk" in cache:  # paged pool (attn only)
+            o, cache = _chunk_attention_paged(cfg, par, p["attn"], hn, cache,
+                                              qpos, live, table,
+                                              n_host_chunks=n_host_chunks)
+        else:
+            o, cache = _chunk_attention(cfg, par, p["attn"], hn, cache, qpos, live,
+                                        window=window,
+                                        n_host_chunks=0 if kind == "local_attn" else n_host_chunks)
         h = h + o
         hn2 = L.apply_norm(cfg, p["norm2"], h)
         if cfg.num_experts:
@@ -457,7 +719,7 @@ def _chunk_block(cfg, par, kind, p, h, cache, qpos, live, n_host_chunks=0):
 
 def chunk_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
                cache: Params, toks: jnp.ndarray, offset, live,
-               n_host_chunks: int = 0):
+               n_host_chunks: int = 0, table: Optional[jnp.ndarray] = None):
     """One fused mixed step: every batch row processes a ``cp``-token window.
 
     Contract:
@@ -473,6 +735,8 @@ def chunk_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
       cache  — pytree from ``init_cache``; updated in place at the live
                positions only (shape/dtype-stable — rides the mixed-step
                ``lax.scan`` carry in ``runtime/decode_loop.py``).
+      table  — optional [b, max_pages] int32 page table for the paged pool
+               (``init_paged_cache`` layout; see ``runtime/paged.py``).
 
     Recurrent blocks (ssm / rglru / local_attn ring) are handled by the
     *state-at-length gather*: pad positions are identity transitions and
@@ -498,7 +762,8 @@ def chunk_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
         new_caches = {}
         for i, kind in enumerate(pat):
             h, nc = _chunk_block(cfg, par, kind, cyc_p[f"pos{i}"], h,
-                                 cyc_cache[f"pos{i}"], qpos, live, n_host_chunks)
+                                 cyc_cache[f"pos{i}"], qpos, live, n_host_chunks,
+                                 table)
             new_caches[f"pos{i}"] = nc
         return h, new_caches
 
@@ -510,7 +775,8 @@ def chunk_step(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
         new_tail = []
         for i, kind in enumerate(tail):
             h, nc = _chunk_block(cfg, par, kind, params["tail"][i], h,
-                                 cache["tail"][i], qpos, live, n_host_chunks)
+                                 cache["tail"][i], qpos, live, n_host_chunks,
+                                 table)
             new_tail.append(nc)
         new_cache["tail"] = new_tail
     h = L.apply_norm(cfg, params["final_norm"], h)

@@ -207,7 +207,8 @@ def mixed_segment(cfg: ModelConfig, par: Optional[ParallelContext], params: Para
                   pfill: jnp.ndarray, pend: jnp.ndarray, plen: jnp.ndarray, *,
                   num_steps: int, prefill_chunk: int, n_host_chunks: int = 0,
                   sampling: SamplingConfig = GREEDY,
-                  stop_tokens: Sequence[int] = (), pad_id: int = 0):
+                  stop_tokens: Sequence[int] = (), pad_id: int = 0,
+                  table: Optional[jnp.ndarray] = None):
     """Run ``num_steps`` fused mixed steps in ONE ``lax.scan``.
 
     Per step, each slot does what its traced state says:
@@ -230,10 +231,13 @@ def mixed_segment(cfg: ModelConfig, par: Optional[ParallelContext], params: Para
     and step count.
 
     Carry (shape/dtype-stable): ``(cache, mode, tok, pos, key, rem,
-    pfill)``; ``pend [b, P]``/``plen [b]`` (the staged prompts) are
-    scan-invariant.  Returns ``(emit [b, num_steps], valid [b, num_steps],
-    aux)`` where ``aux`` is the final carry as a dict — segments chain by
-    feeding it back, and the host harvests ``emit`` where ``valid``.
+    pfill)``; ``pend [b, P]``/``plen [b]`` (the staged prompts) and the
+    optional paged-pool page ``table`` ([b, max_pages] int32, see
+    ``runtime/paged.py`` — threaded into both step bodies so attention
+    gathers/scatters K/V through it) are scan-invariant.  Returns
+    ``(emit [b, num_steps], valid [b, num_steps], aux)`` where ``aux`` is
+    the final carry as a dict — segments chain by feeding it back, and
+    the host harvests ``emit`` where ``valid``.
     """
     b = tok.shape[0]
     cp = int(prefill_chunk)
@@ -254,11 +258,11 @@ def mixed_segment(cfg: ModelConfig, par: Optional[ParallelContext], params: Para
             toks = jnp.take_along_axis(pend, idx, axis=1)
             toks = jnp.where(is_pf[:, None], toks, tok)  # decode rows: col 0 = tok
             return SV.chunk_step(cfg, par, params, cache, toks, off, live,
-                                 n_host_chunks=n_host_chunks)
+                                 n_host_chunks=n_host_chunks, table=table)
 
         def decode_branch(cache, tok):
             return SV.decode_step(cfg, par, params, cache, {"tokens": tok},
-                                  pos, n_host_chunks=n_host_chunks)
+                                  pos, n_host_chunks=n_host_chunks, table=table)
 
         logits, cache = jax.lax.cond(jnp.any(is_pf), chunk_branch,
                                      decode_branch, cache, tok)
@@ -305,6 +309,12 @@ class ServeEngine:
     segment (one ``lax.scan`` of fused steps) and ``reset_slot`` (row
     invalidation at assignment) — ``compiled_programs()`` reports the live
     count so tests can pin it.
+
+    The slot-lifecycle points are overridable hooks (``_begin`` /
+    ``_admit`` / ``_dispatch`` / ``_post_dispatch`` / ``_release`` /
+    ``_end``) so ``runtime/paged.py::PagedServeEngine`` can swap the dense
+    per-slot cache for the slot-shared paged pool without touching the
+    scheduler itself.
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, *, slots: int,
@@ -319,16 +329,21 @@ class ServeEngine:
         self.segment = segment
         self.n_host_chunks = n_host_chunks
         self.cp = int(prefill_chunk) if prefill_chunk else min(bucket, 64)
-        stop_tokens = tuple(stop_tokens)
+        self._stop = tuple(stop_tokens)
         self.last_stats: Dict[str, Any] = {}
+        self._build_programs()
+
+    # -- compiled programs (subclass hook) -------------------------------
+    def _build_programs(self) -> None:
+        cfg, par, params = self.cfg, self.par, self.params
 
         def seg(cache, mode, tok, pos, key, rem, pfill, pend, plen):
             return mixed_segment(cfg, par, params, cache, mode, tok, pos, key,
-                                 rem, pfill, pend, plen, num_steps=segment,
+                                 rem, pfill, pend, plen, num_steps=self.segment,
                                  prefill_chunk=self.cp,
-                                 n_host_chunks=n_host_chunks,
-                                 sampling=sampling, stop_tokens=stop_tokens,
-                                 pad_id=pad_id)
+                                 n_host_chunks=self.n_host_chunks,
+                                 sampling=self.sampling, stop_tokens=self._stop,
+                                 pad_id=self.pad_id)
 
         self._segment = jax.jit(seg)
         self._reset = jax.jit(reset_slot)
@@ -360,6 +375,33 @@ class ServeEngine:
             S = -(-S // self.n_host_chunks) * self.n_host_chunks
         return P, S
 
+    # -- slot-lifecycle hooks (overridden by the paged engine) -----------
+    def _begin(self, B: int, P: int, S: int):
+        """Start a workload: return the cache the segments will carry."""
+        return SV.init_cache(self.cfg, B, S)
+
+    def _admit(self, cache, s: int, idx: int, prompt, active: bool):
+        """Claim slot ``s`` for request ``idx``: invalidate the slot's rows
+        and return ``(cache, resume)`` where ``resume`` is how many prompt
+        tokens are ALREADY cached (prefill starts there; dense: 0).  May
+        return ``None`` to defer the request when resources are
+        momentarily exhausted — only legal while other slots are still
+        ``active`` (they will free resources); otherwise raise."""
+        self.last_stats["resets"] += 1
+        return self._reset(cache, s), 0
+
+    def _dispatch(self, cache, mode, tok, pos, key, rem, pfill, pend, plen):
+        return self._segment(cache, mode, tok, pos, key, rem, pfill, pend, plen)
+
+    def _post_dispatch(self, mode, pfill, plen, pend, owner) -> None:
+        """Host-side bookkeeping after each segment (paged: radix publish)."""
+
+    def _release(self, s: int) -> None:
+        """Slot ``s`` went FREE and its owner was harvested."""
+
+    def _end(self, cache) -> None:
+        """Workload drained (every slot released)."""
+
     # -- the scheduler ---------------------------------------------------
     def generate(self, prompts: Sequence[Sequence[int]],
                  key: Optional[jnp.ndarray] = None) -> List[List[int]]:
@@ -378,7 +420,10 @@ class ServeEngine:
         out: List[List[int]] = [[] for _ in prompts]
         B = self.slots
         P, S = self._capacity(prompts)
-        cache = SV.init_cache(self.cfg, B, S)
+        stats: Dict[str, Any] = {"steps": [], "dispatches": 0, "resets": 0,
+                                 "capacity": S, "pending_len": P}
+        self.last_stats = stats
+        cache = self._begin(B, P, S)
         mode = np.full(B, FREE, np.int32)
         tok = np.zeros((B, 1), np.int32)
         pos = np.zeros(B, np.int32)
@@ -387,27 +432,30 @@ class ServeEngine:
         pend = np.full((B, P), self.pad_id, np.int32)
         plen = np.ones(B, np.int32)
         owner: List[Optional[int]] = [None] * B
-        stats: Dict[str, Any] = {"steps": [], "dispatches": 0, "resets": 0,
-                                 "capacity": S, "pending_len": P}
 
         while True:
             for s in range(B):
-                if owner[s] is None and queue:
-                    idx, prompt = queue.pop(0)
-                    owner[s] = idx
-                    n = len(prompt)
-                    pend[s, :n] = list(prompt)
-                    pend[s, n:] = self.pad_id
-                    plen[s], pfill[s], mode[s] = n, 0, PREFILL
-                    rem[s], pos[s], tok[s] = self.max_new, 0, self.pad_id
-                    cache = self._reset(cache, s)
-                    stats["resets"] += 1
+                if owner[s] is not None or not queue:
+                    continue
+                idx, prompt = queue[0]
+                active = any(o is not None for o in owner)
+                admitted = self._admit(cache, s, idx, prompt, active)
+                if admitted is None:  # deferred (pool pressure): retry later
+                    break
+                cache, resume = admitted
+                queue.pop(0)
+                owner[s] = idx
+                n = len(prompt)
+                pend[s, :n] = list(prompt)
+                pend[s, n:] = self.pad_id
+                plen[s], pfill[s], mode[s] = n, resume, PREFILL
+                rem[s], pos[s], tok[s] = self.max_new, 0, self.pad_id
             if all(o is None for o in owner):
                 break
             key, sub = jax.random.split(key)
             n_prefilling = int((mode == PREFILL).sum())
             t0 = time.perf_counter()
-            emits, valids, aux = self._segment(
+            emits, valids, aux = self._dispatch(
                 cache, mode, tok, pos, sub, rem, pfill, pend, plen)
             cache = aux["cache"]
             mode, tok, pos, rem, pfill, em, va = (
@@ -418,14 +466,16 @@ class ServeEngine:
             stats["dispatches"] += 1
             stats["steps"].append({"ms": dt * 1e3, "prefilling": n_prefilling,
                                    "emitted": int(va.sum())})
+            self._post_dispatch(mode, pfill, plen, pend, owner)
             for s in range(B):
                 if owner[s] is None:
                     continue
                 out[owner[s]].extend(
                     int(t) for t, v in zip(em[s], va[s]) if v)
                 if mode[s] == FREE:
+                    self._release(s)
                     owner[s] = None
-        self.last_stats = stats
+        self._end(cache)
         return out
 
 

@@ -1,0 +1,603 @@
+"""Two-tier paged KV-cache pool with radix-tree prefix reuse.
+
+The dense serve engine gives every slot a ``[b, max_len]`` cache row:
+memory scales with ``slots x worst-case-prompt`` even when most rows are
+short, ``reset_slot`` invalidates a whole row, and two requests sharing a
+long prefix prefill it twice.  This module replaces the per-slot rows of
+full-attention blocks with one slot-SHARED pool of fixed-size pages
+(``models/serve.py::init_paged_cache``) plus host-side metadata:
+
+* ``PagePool`` — free-list allocator with refcounts over ``n_pages``
+  physical pages; a page is free iff its refcount is 0.
+* ``RadixTree`` — prefix index at full-page granularity, keyed on the
+  page's token content (one tree node per page; the path from the root
+  spells the prefix, so lookups chain page keys exactly like a rolling
+  hash).  Matching a new prompt maps its longest previously-prefilled
+  full-page prefix to the physical pages that already hold its KV —
+  copy-free sharing; the tree holds one refcount per page it references,
+  so cached prefixes survive the requests that created them until evicted
+  (LRU leaves first, and only pages nobody else maps).
+* ``PagedCacheManager`` — per-slot page tables (``[slots, max_pages]``
+  int32; ``-1`` = unmapped, FREE rows point at the trash page), admission
+  control (a request's full page reserve is allocated up front, so the
+  table is invariant across a whole segment and pool exhaustion is a
+  clean admit-time error, never a mid-flight one), copy-on-write
+  (``ensure_writable``: a shared page is copied before its owner may
+  write, so no page is ever reachable from two tables once they diverge),
+  and the radix publish/evict lifecycle.  Pure host metadata — device
+  work (page invalidation, COW copies) is returned as work lists the
+  engine dispatches through its jitted ``paged_reset``/``copy_page``
+  programs.
+* ``PagedServeEngine`` — ``ServeEngine`` subclass: the fused mixed-step
+  scheduler is untouched; attention simply gathers/scatters K/V through
+  the page table (``models/serve.py`` paged twins, host-streamed page by
+  page via ``fori_double_buffered`` when ``n_host_chunks > 0``), admit
+  maps radix-hit pages and starts prefill AFTER them (a shared prefix is
+  never recomputed), and release returns the slot's pages to the pool.
+
+See ``docs/serving.md`` (paged-pool section) for the lifecycle diagram.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.core.parallel import ParallelContext
+from repro.models import serve as SV
+from repro.models.transformer import layout_of
+from repro.runtime import decode_loop as DL
+
+Params = Dict[str, Any]
+
+
+class PoolExhausted(ValueError):
+    """No free pages for an admission.  A ``ValueError`` so it surfaces
+    cleanly when raised to callers, but catchable separately so the engine
+    can defer a request while other slots still hold pages."""
+
+
+# ---------------------------------------------------------------------------
+# page allocator
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Free-list page allocator with refcounts.
+
+    Invariants (property-tested in ``tests/test_paged.py``):
+      * a page is on the free list iff its refcount is 0;
+      * ``alloc`` never hands out a page twice without an intervening
+        release to zero;
+      * ``share``/``release`` only touch live (refcount > 0) pages.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        self.n_pages = n_pages
+        self.refcount = np.zeros(n_pages, np.int64)
+        self._free = list(range(n_pages - 1, -1, -1))  # stack: page 0 first
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(f"all {self.n_pages} pages in use")
+        pid = self._free.pop()
+        self.refcount[pid] = 1
+        return pid
+
+    def share(self, pid: int) -> None:
+        if self.refcount[pid] <= 0:
+            raise ValueError(f"share of free page {pid}")
+        self.refcount[pid] += 1
+
+    def release(self, pid: int) -> None:
+        rc = int(self.refcount[pid])
+        if rc <= 0:
+            raise ValueError(f"release of free page {pid}")
+        self.refcount[pid] = rc - 1
+        if rc == 1:
+            self._free.append(pid)
+
+
+# ---------------------------------------------------------------------------
+# radix tree (full-page prefix index)
+# ---------------------------------------------------------------------------
+
+
+def _page_key(tokens) -> bytes:
+    """Exact content key of one page of prompt tokens (the dict lookup
+    hashes it, chaining parent keys along the tree path)."""
+    return np.asarray(tokens, np.int32).tobytes()
+
+
+class _Node:
+    __slots__ = ("children", "parent", "key", "page", "last_used")
+
+    def __init__(self, parent: Optional["_Node"] = None,
+                 key: Optional[bytes] = None):
+        self.children: Dict[bytes, "_Node"] = {}
+        self.parent, self.key = parent, key
+        self.page = -1
+        self.last_used = 0
+
+
+class RadixTree:
+    """Full-page-granularity prefix index over a ``PagePool``.
+
+    Only FULL pages are indexed — a prompt's partial tail page is private
+    to its slot, so shared pages are immutable by construction (writes
+    only ever target the suffix a request prefills itself, or go through
+    copy-on-write).  The tree owns one refcount per referenced page.
+    """
+
+    def __init__(self, page_size: int, pool: PagePool):
+        self.page_size, self.pool = page_size, pool
+        self.root = _Node()
+        self._clock = 0
+        self.pages = 0  # pages the tree currently references
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Physical pages holding the longest already-indexed full-page
+        prefix of ``tokens``.  Touches LRU stamps; takes NO refcounts —
+        the caller shares what it actually maps."""
+        ps = self.page_size
+        node, pids, t = self.root, [], self._tick()
+        for i in range(len(tokens) // ps):
+            child = node.children.get(_page_key(tokens[i * ps:(i + 1) * ps]))
+            if child is None:
+                break
+            child.last_used = t
+            pids.append(child.page)
+            node = child
+        return pids
+
+    def insert(self, tokens: Sequence[int], pids: Sequence[int]) -> int:
+        """Index ``pids`` as holding the leading full pages of ``tokens``.
+        Existing nodes win (first prefill published; contents are
+        identical by construction) and take no extra reference.  Returns
+        how many pages were newly indexed."""
+        ps = self.page_size
+        node, t, added = self.root, self._tick(), 0
+        for i, pid in enumerate(pids):
+            key = _page_key(tokens[i * ps:(i + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(parent=node, key=key)
+                child.page = int(pid)
+                node.children[key] = child
+                self.pool.share(int(pid))
+                self.pages += 1
+                added += 1
+            child.last_used = t
+            node = child
+        return added
+
+    def _evictable_leaves(self) -> List[_Node]:
+        out, stack = [], [self.root]
+        while stack:
+            nd = stack.pop()
+            for c in nd.children.values():
+                if c.children:
+                    stack.append(c)
+                elif int(self.pool.refcount[c.page]) == 1:  # tree-only ref
+                    out.append(c)
+        return out
+
+    def evict(self, n_pages: int) -> int:
+        """Drop up to ``n_pages`` least-recently-used leaf pages whose only
+        reference is the tree's own.  Interior nodes become evictable as
+        their children go (suffix-first, so a surviving node always has
+        its whole prefix chain intact).  Returns pages actually freed."""
+        freed = 0
+        while freed < n_pages:
+            leaves = self._evictable_leaves()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: nd.last_used)
+            del victim.parent.children[victim.key]
+            self.pool.release(victim.page)
+            self.pages -= 1
+            freed += 1
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# page tables + admission + COW
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdmitPlan:
+    """Host-side result of admitting one request: what the engine must
+    dispatch to the device before the slot's first segment."""
+
+    resume: int                        # prompt tokens already cached (skip)
+    fresh_pages: List[int]             # newly allocated -> need invalidation
+    cow: List[Tuple[int, int]]         # (src, dst) page copies to dispatch
+    hit_pages: int                     # full pages served from the tree
+
+
+class PagedCacheManager:
+    """Page tables, admission control, COW, and the radix lifecycle.
+
+    The manager never touches device arrays: ``admit`` returns an
+    ``AdmitPlan`` naming the pages to invalidate/copy, and ``table`` is a
+    plain int32 numpy array the engine ships with every dispatch.  A
+    request's worst-case page reserve (``ceil((plen + budget) / ps)``) is
+    allocated at admit, so the table is segment-invariant and the pool can
+    never run dry mid-flight — exhaustion is an admit-time
+    ``PoolExhausted``.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, use_radix: bool = True):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.pool = PagePool(n_pages)
+        self.page_size = page_size
+        self.radix = RadixTree(page_size, self.pool) if use_radix else None
+        self.trash = n_pages  # physical index of the FREE-slot write sink
+        self.table: Optional[np.ndarray] = None
+        self._slot_pages: List[List[int]] = []
+
+    def begin(self, slots: int, max_pages: int) -> None:
+        """Start a workload: fresh all-FREE tables.  Slots a previous
+        workload left admitted (an exception mid-``generate`` — the engine
+        is long-lived, so it must not stay wedged) are released here;
+        radix-indexed pages persist either way."""
+        for s, pages in enumerate(self._slot_pages):
+            if pages:
+                self.release(s)
+        self.table = np.full((slots, max_pages), self.trash, np.int32)
+        self._slot_pages = [[] for _ in range(slots)]
+
+    # -- admission -------------------------------------------------------
+    def admit(self, slot: int, tokens: Sequence[int], budget: int,
+              label: str = "request") -> AdmitPlan:
+        """Map slot ``slot`` for a prompt of ``tokens`` plus ``budget``
+        generated tokens.  Radix-matched prefix pages are mapped shared
+        (copy-free); the rest of the reserve is allocated fresh.  When the
+        match covers the whole prompt, the last matched page is taken via
+        copy-on-write instead — the resumed prefill must recompute (and
+        rewrite) the final token to produce first-token logits, and a
+        shared page must never be written."""
+        if self._slot_pages[slot]:
+            raise ValueError(f"slot {slot} admitted twice without release")
+        ps = self.page_size
+        plen = len(tokens)
+        need = max(-(-(plen + budget) // ps), 1)
+        if need > self.table.shape[1]:
+            raise ValueError(
+                f"{label}: needs {need} pages ({plen} prompt + {budget} new "
+                f"tokens at page_size={ps}) but the table is only "
+                f"{self.table.shape[1]} pages wide")
+        matched = self.radix.match(tokens) if self.radix is not None else []
+        m = len(matched)
+        resume = min(m * ps, max(plen - 1, 0))
+        n_shared = m if resume == m * ps else m - 1
+        shared = matched[:n_shared]
+        cow_src = matched[n_shared:]  # 0 or 1 page (the full-cover case)
+        # take refs on EVERY matched page first — the shared ones we keep
+        # AND the COW source (its protective ref is dropped once the copy
+        # pair is recorded) — so eviction can't free a page the plan reads
+        for pid in (*shared, *cow_src):
+            self.pool.share(pid)
+        fresh_needed = need - n_shared
+        if self.pool.free_count < fresh_needed and self.radix is not None:
+            self.radix.evict(fresh_needed - self.pool.free_count)
+        if self.pool.free_count < fresh_needed:
+            for pid in (*shared, *cow_src):
+                self.pool.release(pid)
+            raise PoolExhausted(
+                f"{label}: needs {fresh_needed} free pages ({plen} prompt + "
+                f"{budget} new tokens at page_size={ps}, {n_shared} prefix "
+                f"pages shared) but only {self.pool.free_count} of "
+                f"{self.pool.n_pages} are free")
+        cow: List[Tuple[int, int]] = []
+        pids = list(shared)
+        if cow_src:
+            dst = self.pool.alloc()
+            cow.append((int(cow_src[0]), dst))
+            pids.append(dst)
+            self.pool.release(int(cow_src[0]))  # drop the protective ref
+        fresh = [self.pool.alloc() for _ in range(need - len(pids))]
+        pids.extend(fresh)
+        self.table[slot, :] = -1
+        self.table[slot, :need] = pids
+        self._slot_pages[slot] = pids
+        return AdmitPlan(resume=resume, fresh_pages=fresh, cow=cow,
+                         hit_pages=m)
+
+    def release(self, slot: int) -> None:
+        """Return the slot's pages (tree-shared ones survive via their
+        tree refcount) and park the row on the trash page."""
+        for pid in self._slot_pages[slot]:
+            self.pool.release(pid)
+        self._slot_pages[slot] = []
+        self.table[slot, :] = self.trash
+
+    # -- copy-on-write ---------------------------------------------------
+    def ensure_writable(self, slot: int, logical_j: int
+                        ) -> Optional[Tuple[int, int]]:
+        """Make logical page ``logical_j`` of ``slot`` exclusively owned.
+        Returns the ``(src, dst)`` device copy to dispatch when the page
+        was shared (after which no page is reachable from two tables),
+        ``None`` when it already was exclusive."""
+        pid = int(self.table[slot, logical_j])
+        if pid < 0 or pid == self.trash:
+            raise ValueError(f"slot {slot} logical page {logical_j} unmapped")
+        if int(self.pool.refcount[pid]) <= 1:
+            return None
+        dst = self.pool.alloc()
+        self.pool.release(pid)
+        self.table[slot, logical_j] = dst
+        self._slot_pages[slot][logical_j] = dst
+        return pid, dst
+
+    # -- radix lifecycle -------------------------------------------------
+    def complete_prefill(self, slot: int, tokens: Sequence[int]) -> int:
+        """Prefill finished: publish the prompt's full pages so future
+        requests sharing the prefix map them copy-free."""
+        if self.radix is None:
+            return 0
+        full = len(tokens) // self.page_size
+        if not full:
+            return 0
+        return self.radix.insert(list(tokens)[: full * self.page_size],
+                                 self._slot_pages[slot][:full])
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.pool.used_count
+
+
+# ---------------------------------------------------------------------------
+# jitted page maintenance programs
+# ---------------------------------------------------------------------------
+
+
+def _leaf_names(path) -> List[str]:
+    return [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+
+
+def paged_reset(cache: Params, i, page_ids: jnp.ndarray) -> Params:
+    """Slot + page invalidation in one program: slot ``i``'s per-slot rows
+    reset exactly like ``reset_slot`` (dense ``kpos`` -> -1, recurrent
+    state -> 0), and the pool's ``pkpos`` rows at ``page_ids`` go to -1 —
+    newly allocated pages may hold a previous owner's entries, which must
+    not alias the new sequence's positions.  ``page_ids`` is fixed-width;
+    pad with any out-of-range id (they scatter with ``mode="drop"``)."""
+    cache = DL.reset_slot(cache, i)
+
+    def fix(path, leaf):
+        names = _leaf_names(path)
+        if names[-1] != "pkpos":
+            return leaf
+        if names[0] == "tail":
+            return leaf.at[page_ids].set(-1, mode="drop")
+        return leaf.at[:, page_ids].set(-1, mode="drop")
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def copy_page(cache: Params, src, dst, drop_from) -> Params:
+    """Copy physical page ``src`` -> ``dst`` in every attention layer (the
+    COW primitive).  Entries at in-page offsets ``>= drop_from`` are
+    invalidated in the copy: they are the COW'd tail the resumed prefill
+    will recompute and rewrite, and leaving them valid would double-count
+    against the chunk program's own intra-window keys."""
+    keep = None
+
+    def fix(path, leaf):
+        nonlocal keep
+        names = _leaf_names(path)
+        kind = names[-1]
+        if kind not in ("pk", "pv", "pkpos"):
+            return leaf
+        stacked = names[0] != "tail"
+        row = leaf[:, src] if stacked else leaf[src]
+        if kind == "pkpos":
+            ps = leaf.shape[-1]
+            if keep is None:
+                keep = jnp.arange(ps) < drop_from
+            row = jnp.where(keep, row, -1)
+        return leaf.at[:, dst].set(row) if stacked else leaf.at[dst].set(row)
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class PagedServeEngine(DL.ServeEngine):
+    """Continuous batching over the slot-shared paged pool.
+
+    Same fused mixed-step scheduler as ``ServeEngine`` — the segment
+    program just reads/writes attention K/V through the page table, so
+    ``compiled_programs()`` stays a bounded set (one segment, one
+    reset-and-invalidate, one COW copy) and program size is flat in
+    ``n_pages`` (the pool only changes array DIMENSIONS; the page loop is
+    ``fori_double_buffered`` over logical pages).  What changes is the
+    slot lifecycle:
+
+      admit   — radix-match the prompt, map shared prefix pages copy-free
+                (prefill resumes AFTER them), allocate the rest of the
+                worst-case reserve, invalidate fresh pages, dispatch COW
+                copies.  A request that cannot fit defers while other
+                slots hold pages and raises ``ValueError`` (naming it)
+                when the pool could never take it.
+      release — refcount-release the slot's pages; radix-published prefix
+                pages survive for future requests (two-tier: with
+                ``n_host_chunks > 0`` the pool itself is host-resident
+                and pages stream device-ward inside attention).
+
+    ``radix=True`` only takes effect for pure global-attention layouts:
+    recurrent blocks (ssm/rglru/local_attn ring) integrate the whole
+    prefix into per-slot state that a mapped page cannot restore, so
+    prefix skipping would be silently wrong — those layouts still get the
+    paged pool, just with ``resume = 0``.
+
+    The pool (and its radix-indexed contents) persists across
+    ``generate`` calls — a shared system prompt served in one workload is
+    a prefix hit in the next.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, *, slots: int,
+                 bucket: int, max_new_tokens: int, page_size: int = 16,
+                 n_pages: int = 0, radix: bool = True,
+                 prefill_chunk: int = 0, n_host_chunks: int = 0,
+                 sampling: DL.SamplingConfig = DL.GREEDY,
+                 stop_tokens: Sequence[int] = (), pad_id: int = 0,
+                 segment: int = 8, par: Optional[ParallelContext] = None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = int(page_size)
+        if n_pages <= 0:  # default: dense-equivalent capacity
+            n_pages = slots * -(-(bucket + max_new_tokens) // self.page_size)
+        self.n_pages = int(n_pages)
+        pat, _, tail = layout_of(cfg)
+        self.radix_enabled = bool(radix) and all(
+            k == "attn" for k in (*pat, *tail))
+        self.kv = PagedCacheManager(self.n_pages, self.page_size,
+                                    use_radix=self.radix_enabled)
+        self._pool_cache = SV.init_paged_cache(cfg, slots, self.n_pages,
+                                               self.page_size)
+        self._table_dev = None  # device copy, refreshed at admit/release
+        self._inserted = [True] * slots
+        super().__init__(cfg, params, slots=slots, bucket=bucket,
+                         max_new_tokens=max_new_tokens,
+                         prefill_chunk=prefill_chunk,
+                         n_host_chunks=n_host_chunks, sampling=sampling,
+                         stop_tokens=stop_tokens, pad_id=pad_id,
+                         segment=segment, par=par)
+        if self.cp % self.page_size and self.page_size % self.cp:
+            raise ValueError(
+                f"prefill_chunk={self.cp} and page_size={self.page_size} "
+                f"must divide one another: radix prefix hits resume prefill "
+                f"at a page boundary, and only a mutually-dividing grid "
+                f"keeps every chunk window inside the slot's allocated page "
+                f"reserve")
+        # two-tier placement: the cold pool lives host-side; attention
+        # streams gathered pages device-ward (no-op on CPU)
+        self._pool_cache = self._offload_pool(self._pool_cache)
+
+    def _offload_pool(self, cache):
+        """Park the pool's K/V leaves in the offload tier when the engine
+        is host-streaming — applied at init AND after every dispatch (the
+        segment's outputs land in default memory; re-offloading mirrors
+        ``launch/steps.py``'s per-step cache re-offload)."""
+        if self.par is None or not self.n_host_chunks:
+            return cache
+
+        def offload(path, leaf):
+            return self.par.to_host(leaf) if _leaf_names(path)[-1] in (
+                "pk", "pv") else leaf
+
+        return jax.tree_util.tree_map_with_path(offload, cache)
+
+    # -- compiled programs ----------------------------------------------
+    def _build_programs(self) -> None:
+        cfg, par, params = self.cfg, self.par, self.params
+
+        def seg(cache, mode, tok, pos, key, rem, pfill, pend, plen, table):
+            return DL.mixed_segment(cfg, par, params, cache, mode, tok, pos,
+                                    key, rem, pfill, pend, plen,
+                                    num_steps=self.segment,
+                                    prefill_chunk=self.cp,
+                                    n_host_chunks=self.n_host_chunks,
+                                    sampling=self.sampling,
+                                    stop_tokens=self._stop,
+                                    pad_id=self.pad_id, table=table)
+
+        self._segment = jax.jit(seg)
+        self._reset = jax.jit(paged_reset)
+        self._copy = jax.jit(copy_page)
+
+    def compiled_programs(self) -> Dict[str, int]:
+        return {"segment": self._segment._cache_size(),
+                "reset": self._reset._cache_size(),
+                "copy": self._copy._cache_size()}
+
+    # -- slot lifecycle --------------------------------------------------
+    def _begin(self, B: int, P: int, S: int):
+        max_pages = -(-(P + self.max_new) // self.page_size)
+        self.kv.begin(B, max_pages)
+        self._table_dev = None
+        self._inserted = [True] * B
+        self.last_stats.update({
+            "page_size": self.page_size, "n_pages": self.n_pages,
+            "max_pages": max_pages, "radix": self.radix_enabled,
+            "prompt_tokens": 0, "prefilled_tokens": 0,
+            "prefix_hit_tokens": 0, "cow_copies": 0, "deferrals": 0,
+            "pages_peak": 0, "radix_pages": 0,
+        })
+        return self._pool_cache
+
+    def _admit(self, cache, s: int, idx: int, prompt, active: bool):
+        st = self.last_stats
+        try:
+            plan = self.kv.admit(s, list(prompt), self.max_new,
+                                 label=f"request {idx}")
+        except PoolExhausted as e:
+            if active:  # running slots will release pages; retry next round
+                st["deferrals"] += 1
+                return None
+            raise ValueError(str(e)) from None
+        ids = np.full(self.n_pages, self.n_pages + 1, np.int32)  # pad -> OOB
+        ids[: len(plan.fresh_pages)] = plan.fresh_pages
+        cache = self._reset(cache, s, jnp.asarray(ids))
+        for src, dst in plan.cow:
+            cache = self._copy(cache, jnp.int32(src), jnp.int32(dst),
+                               jnp.int32(plan.resume % self.page_size))
+            st["cow_copies"] += 1
+        self._table_dev = None  # table changed: re-ship at next dispatch
+        st["resets"] += 1
+        st["prompt_tokens"] += len(prompt)
+        st["prefilled_tokens"] += len(prompt) - plan.resume
+        st["prefix_hit_tokens"] += plan.resume
+        st["pages_peak"] = max(st["pages_peak"], self.kv.pages_in_use)
+        self._inserted[s] = False
+        return cache, plan.resume
+
+    def _dispatch(self, cache, mode, tok, pos, key, rem, pfill, pend, plen):
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self.kv.table)
+        emits, valids, aux = self._segment(cache, mode, tok, pos, key, rem,
+                                           pfill, pend, plen, self._table_dev)
+        aux["cache"] = self._offload_pool(aux["cache"])
+        return emits, valids, aux
+
+    def _post_dispatch(self, mode, pfill, plen, pend, owner) -> None:
+        for s in range(self.slots):
+            if owner[s] is None or self._inserted[s] or pfill[s] < plen[s]:
+                continue
+            self._inserted[s] = True
+            self.kv.complete_prefill(s, [int(t) for t in pend[s, : plen[s]]])
+
+    def _release(self, s: int) -> None:
+        self.kv.release(s)
+        self._table_dev = None  # table changed: re-ship at next dispatch
+
+    def _end(self, cache) -> None:
+        # the pool (radix-shared prefixes included) persists across calls
+        self._pool_cache = cache
+        if self.kv.radix is not None:
+            self.last_stats["radix_pages"] = self.kv.radix.pages
