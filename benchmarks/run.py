@@ -64,6 +64,7 @@ def main() -> None:
         "compile_scaling": compile_scaling.run,
         "serve": serve_bench.run,
         "paged": serve_bench.run_paged,
+        "serve_mesh": serve_bench.run_serve_mesh,
     }
     sel = args.only or list(suites)
     failures = 0

@@ -35,6 +35,15 @@ class ParallelContext:
     placement: Optional[PlacementPolicy] = None  # None -> probe-once default
 
     # ------------------------------------------------------------------
+    @classmethod
+    def for_mesh(cls, mesh, **kw) -> "ParallelContext":
+        """Context over an existing mesh with ``dp_axes`` derived from its
+        axis names (``launch.mesh.dp_axes_of``) — the one construction rule
+        shared by the trainer and the serve replicas."""
+        from repro.launch.mesh import dp_axes_of
+
+        return cls(mesh=mesh, dp_axes=dp_axes_of(mesh), **kw)
+
     @property
     def pol(self) -> PlacementPolicy:
         """The backend-capability policy all placement ops route through."""

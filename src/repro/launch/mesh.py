@@ -47,3 +47,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def dp_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def serve_mesh(data: int, model: int, devices=None):
+    """One serve-replica mesh: ``(data, model)`` with the repo's canonical
+    axis names, wrapped in a ready ``ParallelContext`` (``dp_axes`` from
+    :func:`dp_axes_of`, so the replica/data split follows the same rule the
+    trainer uses).  ``models/serve.py::cache_shardings`` then shards the
+    paged pool's kv heads over ``model`` and per-slot state over ``data``;
+    multiple replicas each call this with their own device slice and sit
+    behind ``launch/router.py``."""
+    need = data * model
+    have = len(jax.devices() if devices is None else devices)
+    if have < need:
+        raise ValueError(
+            f"serve_mesh({data}, {model}) needs {need} devices but only "
+            f"{have} are visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before importing "
+            f"jax to fake them on CPU)")
+    mesh = make_compat_mesh((data, model), ("data", "model"), devices)
+    from repro.core.parallel import ParallelContext
+
+    return ParallelContext.for_mesh(mesh)

@@ -1,0 +1,142 @@
+"""Session-affine replica router: the front door of the sharded serve tier.
+
+One ``PagedServeEngine`` replica owns one mesh (its slice of the devices)
+and one radix tree.  Prefix reuse therefore only pays off if requests that
+*share* a prefix land on the *same* replica — round-robin over replicas
+shreds a 97% radix hit rate into near-zero because each replica sees every
+Nth request of a session.  The router restores locality:
+
+* **affine** (default): each request hashes — by explicit session id when
+  given, else by its leading ``prefix_tokens`` prompt tokens — to a home
+  replica (``crc32``: deterministic across processes, unlike Python's
+  seeded ``hash``).  Same session/system-prompt => same replica => radix
+  hit.
+* **spill**: affinity yields when the home replica is overloaded — if its
+  queue is ``spill_margin`` deeper than the least-loaded replica's, the
+  request goes to the latter instead (prefix miss traded for latency).
+* **rr**: plain round-robin, kept as the measured locality baseline
+  (``benchmarks/serve_bench.py::mesh_sweep``).
+
+Replicas are anything with ``generate(prompts) -> List[List[int]]``
+(engines, or subprocess/RPC proxies in a real deployment).  A replica
+that raises is reported as :class:`ReplicaFailed` *naming the replica* —
+a routing tier must say which backend died, not hang or blur the
+traceback into the caller's.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from typing import Any, Dict, List, Optional, Sequence
+
+__all__ = ["ReplicaFailed", "ReplicaRouter"]
+
+
+class ReplicaFailed(RuntimeError):
+    """A replica raised while serving its share of a workload."""
+
+    def __init__(self, replica: int, cause: BaseException):
+        self.replica = replica
+        self.cause = cause
+        super().__init__(f"replica {replica} failed: {cause!r}")
+
+
+class ReplicaRouter:
+    """Dispatch prompts across engine replicas, session-affine by default.
+
+    Host-side and framework-free (plain ints and lists): routing must cost
+    nothing next to a segment dispatch and must not trace/compile anything.
+    """
+
+    def __init__(self, replicas: Sequence[Any], *, policy: str = "affine",
+                 prefix_tokens: int = 16, spill_margin: int = 0):
+        if not replicas:
+            raise ValueError("ReplicaRouter needs at least one replica")
+        if policy not in ("affine", "rr"):
+            raise ValueError(f"unknown router policy {policy!r} "
+                             f"(expected 'affine' or 'rr')")
+        self.replicas = list(replicas)
+        self.policy = policy
+        self.prefix_tokens = int(prefix_tokens)
+        # 0 disables spilling (strict affinity); margin m spills a request
+        # whose home queue is >= m deeper than the shallowest queue
+        self.spill_margin = int(spill_margin)
+        self._rr_next = 0
+        self.depth = [0] * len(self.replicas)  # queued prompts per replica
+        self.last_stats: Dict[str, Any] = {}
+
+    # -- placement -------------------------------------------------------
+    def home_of(self, prompt: Sequence[int],
+                session: Optional[str] = None) -> int:
+        """The affinity home: hash of the session id when given, else of
+        the prompt's leading ``prefix_tokens`` tokens — requests sharing a
+        system prompt share a home even without session bookkeeping."""
+        if session is not None:
+            key = session.encode()
+        else:
+            head = list(prompt)[: self.prefix_tokens]
+            key = b",".join(str(int(t)).encode() for t in head)
+        return zlib.crc32(key) % len(self.replicas)
+
+    def route(self, prompt: Sequence[int],
+              session: Optional[str] = None) -> int:
+        """Pick a replica for one request and account for its queue slot."""
+        if self.policy == "rr":
+            r = self._rr_next
+            self._rr_next = (r + 1) % len(self.replicas)
+            self.depth[r] += 1
+            return r
+        home = self.home_of(prompt, session)
+        r = home
+        if self.spill_margin > 0:
+            least = min(range(len(self.replicas)), key=self.depth.__getitem__)
+            if self.depth[home] - self.depth[least] >= self.spill_margin:
+                r = least
+        self.depth[r] += 1
+        return r
+
+    # -- dispatch --------------------------------------------------------
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 sessions: Optional[Sequence[Optional[str]]] = None,
+                 ) -> List[List[int]]:
+        """Route every prompt, run each replica over its share, and merge
+        the outputs back into request order.  Raises :class:`ReplicaFailed`
+        if any replica raises."""
+        if sessions is not None and len(sessions) != len(prompts):
+            raise ValueError("sessions must align 1:1 with prompts")
+        t0 = time.perf_counter()
+        assigned: List[List[int]] = [[] for _ in self.replicas]  # request idx
+        spilled = 0
+        for i, p in enumerate(prompts):
+            sess = sessions[i] if sessions is not None else None
+            r = self.route(p, sess)
+            if self.policy == "affine" and r != self.home_of(p, sess):
+                spilled += 1
+            assigned[r].append(i)
+
+        outs: List[Optional[List[int]]] = [None] * len(prompts)
+        per_replica: List[Dict[str, Any]] = []
+        for r, idxs in enumerate(assigned):
+            stats: Dict[str, Any] = {"replica": r, "requests": len(idxs)}
+            if idxs:
+                try:
+                    got = self.replicas[r].generate([prompts[i] for i in idxs])
+                except Exception as e:
+                    raise ReplicaFailed(r, e) from e
+                finally:
+                    self.depth[r] -= len(idxs)
+                for i, o in zip(idxs, got):
+                    outs[i] = o
+                eng = getattr(self.replicas[r], "last_stats", None) or {}
+                for k in ("prompt_tokens", "prefix_hit_tokens",
+                          "prefilled_tokens", "dispatches"):
+                    if k in eng:
+                        stats[k] = eng[k]
+            per_replica.append(stats)
+
+        self.last_stats = {
+            "policy": self.policy, "replicas": len(self.replicas),
+            "requests": len(prompts), "spilled": spilled,
+            "per_replica": per_replica, "s": time.perf_counter() - t0,
+        }
+        return [o if o is not None else [] for o in outs]

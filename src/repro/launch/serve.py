@@ -22,12 +22,36 @@ the slot-shared paged pool with radix prefix reuse
 physical pages (0 = dense-equivalent), ``--shared-prefix`` prepends a
 common system prompt to every request to exercise the radix hits, and
 the run reports prefix-hit and page-occupancy stats.
+
+``--mesh AxB`` shards each engine over an (A data, B model) device mesh
+(paged pool kv-heads over ``model`` per ``models/serve.py``), ``--replicas
+N`` runs N such engines on disjoint device slices behind the
+session-affine router (``launch/router.py``; ``--router rr`` is the
+locality-shredding baseline), with per-replica request/prefix-hit stats.
+On CPU the device count is forced automatically (train.py's host8
+pattern).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
+
+
+class _MeshReplica:
+    """One sharded engine + its mesh, entered around every dispatch — the
+    router stays framework-free and replicas stay self-contained."""
+
+    def __init__(self, engine, par):
+        self.engine, self.par = engine, par
+
+    def generate(self, prompts):
+        with self.par.mesh:
+            return self.engine.generate(prompts)
+
+    @property
+    def last_stats(self):
+        return self.engine.last_stats
 
 
 def _engine_main(args):
@@ -50,6 +74,8 @@ def _engine_main(args):
                         size=args.requests)
     prompts = [shared + rng.integers(0, cfg.vocab_size, size=n).tolist()
                for n in lens]
+    if args.mesh:
+        return _mesh_engine_main(args, cfg, params, prompts)
     par = ParallelContext(mesh=None) if args.host_kv_chunks else None
     bucket = args.prompt_len + args.shared_prefix
     kw = dict(slots=args.batch, bucket=bucket, max_new_tokens=args.gen,
@@ -97,6 +123,56 @@ def _engine_main(args):
               f"({st['radix_pages']} retained in the radix tree)")
 
 
+def _mesh_engine_main(args, cfg, params, prompts):
+    """--mesh/--replicas: sharded engine replicas behind the router."""
+    import jax
+
+    from repro.launch.mesh import serve_mesh
+    from repro.launch.router import ReplicaRouter
+    from repro.runtime import decode_loop as DL
+    from repro.runtime.paged import PagedServeEngine
+
+    data, model = (int(x) for x in args.mesh.split("x"))
+    per, n = data * model, args.replicas
+    devs = jax.devices()
+    if len(devs) < per * n:
+        raise SystemExit(f"--mesh {args.mesh} --replicas {n} needs "
+                         f"{per * n} devices, have {len(devs)}")
+    bucket = args.prompt_len + args.shared_prefix
+    kw = dict(slots=args.batch, bucket=bucket, max_new_tokens=args.gen,
+              segment=args.segment, n_host_chunks=args.host_kv_chunks,
+              prefill_chunk=args.prefill_chunk,
+              sampling=DL.SamplingConfig(temperature=args.temperature,
+                                         top_k=args.top_k))
+    if args.paged:
+        kw.update(page_size=args.page_size, n_pages=args.n_pages)
+    replicas = []
+    for r in range(n):
+        par = serve_mesh(data, model, devices=devs[r * per:(r + 1) * per])
+        with par.mesh:
+            eng = (PagedServeEngine if args.paged else DL.ServeEngine)(
+                cfg, params, par=par, **kw)
+        replicas.append(_MeshReplica(eng, par))
+    router = ReplicaRouter(replicas, policy=args.router)
+    t0 = time.perf_counter()
+    outs = router.generate(prompts)
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    st = router.last_stats
+    print(f"[{n} x ({data} data x {model} model) mesh replicas, "
+          f"router={args.router}] {len(prompts)} requests: {total} tokens "
+          f"in {dt*1e3:.0f} ms ({total/dt:.1f} tok/s incl. compile)")
+    for rs in st["per_replica"]:
+        line = (f"  replica {rs['replica']}: {rs['requests']} requests")
+        if "prompt_tokens" in rs:
+            hit = rs.get("prefix_hit_tokens", 0)
+            line += (f", {rs['prompt_tokens']} prompt tokens"
+                     + (f", {hit} prefix-hit" if args.paged else ""))
+        print(line)
+    if args.router == "affine" and st["spilled"]:
+        print(f"  {st['spilled']} requests spilled off their home replica")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -135,8 +211,34 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="with --engine: prepend a common system prompt of "
                          "this many tokens to every request (radix hits)")
+    ap.add_argument("--mesh", default="",
+                    help="with --engine: shard each engine over an AxB "
+                         "(data x model) device mesh, e.g. 1x4 or 2x4")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --mesh: engine replicas on disjoint device "
+                         "slices behind the router")
+    ap.add_argument("--router", default="affine", choices=["affine", "rr"],
+                    help="with --replicas: session-affine dispatch (radix "
+                         "locality survives routing) or round-robin")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.mesh and not args.engine:
+        ap.error("--mesh requires --engine")
+    if args.mesh:
+        try:
+            data, model = (int(x) for x in args.mesh.split("x"))
+        except ValueError:
+            ap.error(f"--mesh must look like AxB, got {args.mesh!r}")
+        import os
+
+        # force enough fake CPU devices BEFORE jax import (train.py host8
+        # pattern); a real accelerator fleet ignores this via its own flags
+        if "--xla_force_host_platform_device_count" not in os.environ.get(
+                "XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count="
+                f"{data * model * args.replicas}").strip()
     if args.engine:
         return _engine_main(args)
     if args.host_kv_chunks and (args.prompt_len + args.gen) % args.host_kv_chunks:

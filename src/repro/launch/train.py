@@ -71,8 +71,7 @@ def main():
         from repro.launch.mesh import make_compat_mesh
 
         mesh = make_compat_mesh((2, 4), ("data", "model"))
-        par = ParallelContext(mesh=mesh, dp_axes=("data",), attn_impl="pallas",
-                              placement=pol)
+        par = ParallelContext.for_mesh(mesh, attn_impl="pallas", placement=pol)
         mesh_cm = mesh
 
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))

@@ -149,12 +149,44 @@ def init_paged_cache(cfg: ModelConfig, b: int, n_pages: int, page_size: int) -> 
     return cache
 
 
+def dense_kv_spec(par: ParallelContext, shape) -> tuple:
+    """Spec components for one dense K/V leaf ``[b, s, h, dh]`` — THE
+    shape-aware rule: batch over dp and heads over model when divisible
+    (Ulysses-style), else fall back to sequence sharding (CP-style); a dim
+    that divides nothing stays replicated."""
+    b, s, h, _ = shape
+    dp = par.dp_axes if b % par.dp == 0 and b >= par.dp else None
+    if h % par.sp == 0 and h >= par.sp:
+        return (dp, None, par.sp_axis, None)
+    sp = par.sp_axis if s % par.sp == 0 and s >= par.sp else None
+    return (dp, sp, None, None)
+
+
+def paged_pool_spec(par: ParallelContext, page_size: int, hkv: int) -> tuple:
+    """Spec components for one pool K/V leaf ``[n_pages+1, page_size, hkv,
+    dh]`` — the dense rule transposed to the paged layout: kv heads over
+    the model axis when divisible, else the in-page sequence dim.  The
+    physical-page dim is ``n_pages + 1`` (trash page) and the page table
+    maps pages to slots arbitrarily, so it is NEVER sharded — every device
+    holds its head (or in-page) slice of every page, and the pool stays
+    replicated over the data axis (it has no batch dim; slots split over
+    data through the per-slot dense leaves instead)."""
+    if hkv % par.sp == 0 and hkv >= par.sp:
+        return (None, None, par.sp_axis, None)
+    if page_size % par.sp == 0 and page_size >= par.sp:
+        return (None, par.sp_axis, None, None)
+    return (None, None, None, None)
+
+
 def cache_shardings(cfg: ModelConfig, par: ParallelContext, cache):
     """NamedShardings for a cache pytree (heads/seq/channels per DESIGN.md).
 
     Shape-aware: a dim is only sharded when divisible by its axis (kv heads
     smaller than the model axis fall back to sequence sharding; batch=1
-    long-context decode leaves batch unsharded)."""
+    long-context decode leaves batch unsharded).  Covers BOTH layouts:
+    dense per-slot rows (``init_cache``) and the slot-shared paged pool
+    (``init_paged_cache`` — ``pk``/``pv`` follow ``paged_pool_spec``,
+    ``pkpos`` co-shards its in-page dim with them)."""
 
     def dp_if(n):
         return par.dp_axes if n % par.dp == 0 and n >= par.dp else None
@@ -168,13 +200,15 @@ def cache_shardings(cfg: ModelConfig, par: ParallelContext, cache):
         lead = (None,) if stacked else ()
         off = 1 if stacked else 0
         shape = leaf.shape[off:]
+        if names[-1] in ("pk", "pv"):  # [*, n_pages+1, ps, hkv, dh]
+            return par.ns(*lead, *paged_pool_spec(par, shape[1], shape[2]))
+        if "pkpos" in names:  # [*, n_pages+1, ps]
+            sub = paged_pool_spec(par, shape[1], cfg.num_kv_heads)
+            return par.ns(*lead, None, sub[1])
         if "kpos" in names:  # [*, b, s]
             return par.ns(*lead, dp_if(shape[0]), None)
         if names[-1] in ("k", "v"):  # [*, b, s, h, dh]
-            b, s, h, _ = shape
-            if sp_if(h):  # Ulysses-style: heads over model
-                return par.ns(*lead, dp_if(b), None, par.sp_axis, None)
-            return par.ns(*lead, dp_if(b), sp_if(s), None, None)  # CP: seq
+            return par.ns(*lead, *dense_kv_spec(par, shape))
         if "conv" in names:  # [*, b, k-1, di]
             return par.ns(*lead, dp_if(shape[0]), None, sp_if(shape[2]))
         if "ssm" in names:  # [*, b, di, ds]
@@ -206,6 +240,10 @@ def _decode_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Param
     ck = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
     cv = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
     kpos = cache["kpos"].at[bi, slot].set(pos)
+    if par is not None and par.mesh is not None:
+        dspec = dense_kv_spec(par, ck.shape)
+        ck = par.constrain(ck, *dspec)
+        cv = par.constrain(cv, *dspec)
 
     g = cfg.num_heads // cfg.num_kv_heads
     qf = q[:, 0].astype(jnp.float32)  # [b, hq, dh]
@@ -325,6 +363,11 @@ def _decode_attention_paged(cfg: ModelConfig, par: Optional[ParallelContext],
     ck = cache["pk"].at[pid_w, off].set(k[:, 0].astype(cache["pk"].dtype), mode="drop")
     cv = cache["pv"].at[pid_w, off].set(v[:, 0].astype(cache["pv"].dtype), mode="drop")
     kpos = cache["pkpos"].at[pid_w, off].set(pos, mode="drop")
+    if par is not None and par.mesh is not None:
+        pspec = paged_pool_spec(par, ps, ck.shape[2])
+        ck = par.constrain(ck, *pspec)
+        cv = par.constrain(cv, *pspec)
+        kpos = par.constrain(kpos, None, pspec[1])
 
     g = cfg.num_heads // cfg.num_kv_heads
     qf = q[:, 0].astype(jnp.float32)  # [b, hq, dh]
@@ -347,11 +390,17 @@ def _decode_attention_paged(cfg: ModelConfig, par: Optional[ParallelContext],
     if n_host_chunks:
         # two-tier pool: cold pages live host-side; stream one logical page
         # per iteration, fetch j+1 issued before page j's merge (Fig. 6)
+        slab_spec = None
+        if par is not None and par.mesh is not None:
+            all_axes = tuple(par.mesh.axis_names)
+            if ps % par.mesh.size == 0:  # host custom-calls need FULL sharding
+                slab_spec = (None, all_axes, None, None)
+
         def fetch(j):
             kc, vc, kp, okp = _paged_gather(ck, cv, kpos, table, j)
             if par is not None:
-                kc = par.to_device(kc)
-                vc = par.to_device(vc)
+                kc = par.to_device(kc, *(slab_spec or ()))
+                vc = par.to_device(vc, *(slab_spec or ()))
             return kc, vc, kp, okp
 
         hi_pos = jnp.max(pos)
@@ -587,6 +636,10 @@ def _chunk_attention(cfg: ModelConfig, par: Optional[ParallelContext], p: Params
     ck = cache["k"].at[bi, slot].set(k.astype(cache["k"].dtype), mode="drop")
     cv = cache["v"].at[bi, slot].set(v.astype(cache["v"].dtype), mode="drop")
     kpos = cache["kpos"].at[bi, slot].set(qpos, mode="drop")
+    if par is not None and par.mesh is not None:
+        dspec = dense_kv_spec(par, ck.shape)
+        ck = par.constrain(ck, *dspec)
+        cv = par.constrain(cv, *dspec)
     return out, {"k": ck, "v": cv, "kpos": kpos}
 
 
@@ -644,12 +697,18 @@ def _chunk_attention_paged(cfg: ModelConfig, par: Optional[ParallelContext],
         return SoftmaxState(acc, m, l)
 
     if n_host_chunks:
+        slab_spec = None
+        if par is not None and par.mesh is not None:
+            all_axes = tuple(par.mesh.axis_names)
+            if ps % par.mesh.size == 0:  # host custom-calls need FULL sharding
+                slab_spec = (None, all_axes, None, None)
+
         def fetch(j):
             kc, vc, kp, okp = _paged_gather(cache["pk"], cache["pv"],
                                             cache["pkpos"], table, j)
             if par is not None:
-                kc = par.to_device(kc)
-                vc = par.to_device(vc)
+                kc = par.to_device(kc, *(slab_spec or ()))
+                vc = par.to_device(vc, *(slab_spec or ()))
             return kc, vc, kp, okp
 
         hi_pos = jnp.max(jnp.where(key_live, qpos, -1))
@@ -679,6 +738,11 @@ def _chunk_attention_paged(cfg: ModelConfig, par: Optional[ParallelContext],
     ck = cache["pk"].at[pid_w, off].set(k.astype(cache["pk"].dtype), mode="drop")
     cv = cache["pv"].at[pid_w, off].set(v.astype(cache["pv"].dtype), mode="drop")
     kpos = cache["pkpos"].at[pid_w, off].set(qpos, mode="drop")
+    if par is not None and par.mesh is not None:
+        pspec = paged_pool_spec(par, ps, ck.shape[2])
+        ck = par.constrain(ck, *pspec)
+        cv = par.constrain(cv, *pspec)
+        kpos = par.constrain(kpos, None, pspec[1])
     return out, {"pk": ck, "pv": cv, "pkpos": kpos}
 
 

@@ -292,6 +292,30 @@ def mixed_segment(cfg: ModelConfig, par: Optional[ParallelContext], params: Para
     return emits.T, valids.T, aux
 
 
+def segment_shardings(cfg, par: Optional[ParallelContext], cache, *,
+                      table: bool = False):
+    """``(in_shardings, out_shardings)`` for the mixed-segment jit on a
+    mesh, or ``None`` off-mesh.
+
+    The cache pytree follows ``models/serve.py::cache_shardings`` (paged
+    pool kv-heads over ``model``, per-slot rows over ``data``); every
+    scheduler scalar/row (mode/tok/pos/key/rem/pfill/pend/plen, and the
+    page ``table`` when present) is explicitly replicated — explicit
+    ``par.ns()`` rather than ``None`` so jit never has to guess.
+    ``NamedSharding`` is shape-free, so ONE jitted segment still serves
+    every workload capacity: the exactly-2-programs guarantee survives
+    meshing.  ``cache`` may be real arrays or ``jax.eval_shape`` structs —
+    only shapes are read."""
+    if par is None or par.mesh is None:
+        return None
+    csh = SV.cache_shardings(cfg, par, cache)
+    r = par.ns()
+    in_sh = (csh,) + (r,) * (8 + (1 if table else 0))
+    out_sh = (r, r, {"cache": csh, "mode": r, "tok": r, "pos": r, "key": r,
+                     "rem": r, "pfill": r})
+    return in_sh, out_sh
+
+
 class ServeEngine:
     """Continuous batching over ``slots`` concurrent cache rows, scheduled
     by the fused mixed step (``mixed_segment``).
@@ -334,6 +358,17 @@ class ServeEngine:
         self._build_programs()
 
     # -- compiled programs (subclass hook) -------------------------------
+    def _segment_shardings(self):
+        """``segment_shardings`` over a representative cache, or ``None``
+        off-mesh.  Bucket-capacity shapes stand in for every workload —
+        ``NamedSharding`` carries no shape, so the sharded jit still serves
+        all capacities with the same two programs."""
+        if self.par is None or self.par.mesh is None:
+            return None
+        _, S = self._capacity([[0]])
+        cache = jax.eval_shape(lambda: SV.init_cache(self.cfg, self.slots, S))
+        return segment_shardings(self.cfg, self.par, cache)
+
     def _build_programs(self) -> None:
         cfg, par, params = self.cfg, self.par, self.params
 
@@ -345,8 +380,19 @@ class ServeEngine:
                                  sampling=self.sampling, stop_tokens=self._stop,
                                  pad_id=self.pad_id)
 
-        self._segment = jax.jit(seg)
-        self._reset = jax.jit(reset_slot)
+        sh = self._segment_shardings()
+        if sh is None:
+            self._cache_sh = None
+            self._segment = jax.jit(seg)
+            self._reset = jax.jit(reset_slot)
+        else:
+            in_sh, out_sh = sh
+            csh, r = in_sh[0], self.par.ns()
+            self._cache_sh = csh
+            self._segment = jax.jit(seg, in_shardings=in_sh,
+                                    out_shardings=out_sh)
+            self._reset = jax.jit(reset_slot, in_shardings=(csh, r),
+                                  out_shardings=csh)
 
     # -- helpers ---------------------------------------------------------
     def compiled_programs(self) -> Dict[str, int]:
@@ -377,8 +423,14 @@ class ServeEngine:
 
     # -- slot-lifecycle hooks (overridden by the paged engine) -----------
     def _begin(self, B: int, P: int, S: int):
-        """Start a workload: return the cache the segments will carry."""
-        return SV.init_cache(self.cfg, B, S)
+        """Start a workload: return the cache the segments will carry.
+        On a mesh, committed to the segment's cache sharding up front —
+        every reset/segment call then sees one input signature, keeping
+        the compiled-program set at exactly two."""
+        cache = SV.init_cache(self.cfg, B, S)
+        if self._cache_sh is not None:
+            cache = jax.device_put(cache, self._cache_sh)
+        return cache
 
     def _admit(self, cache, s: int, idx: int, prompt, active: bool):
         """Claim slot ``s`` for request ``idx``: invalidate the slot's rows

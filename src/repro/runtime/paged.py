@@ -507,13 +507,35 @@ class PagedServeEngine(DL.ServeEngine):
         if self.par is None or not self.n_host_chunks:
             return cache
 
+        # host-placement custom-calls reject PARTIAL replication: on a
+        # mesh the parked pool must shard over EVERY axis, so spread the
+        # in-page dim across all of them (pages always divide evenly when
+        # ps does); off-mesh the spec is empty and to_host is a plain put
+        spec = ()
+        if self.par.mesh is not None:
+            all_axes = tuple(self.par.mesh.axis_names)
+            if self.page_size % self.par.mesh.size == 0:
+                spec = (None, all_axes, None, None)
+
         def offload(path, leaf):
-            return self.par.to_host(leaf) if _leaf_names(path)[-1] in (
-                "pk", "pv") else leaf
+            names = _leaf_names(path)
+            if names[-1] not in ("pk", "pv"):
+                return leaf
+            lead = (None,) if names[0] != "tail" else ()
+            return self.par.to_host(leaf, *(lead + spec if spec else ()))
 
         return jax.tree_util.tree_map_with_path(offload, cache)
 
     # -- compiled programs ----------------------------------------------
+    def _segment_shardings(self):
+        """Pool-layout shardings over the CONCRETE pool (its shapes never
+        change — capacity lives in the page table, not the arrays), plus a
+        replicated page-table argument."""
+        if self.par is None or self.par.mesh is None:
+            return None
+        return DL.segment_shardings(self.cfg, self.par, self._pool_cache,
+                                    table=True)
+
     def _build_programs(self) -> None:
         cfg, par, params = self.cfg, self.par, self.params
 
@@ -527,9 +549,29 @@ class PagedServeEngine(DL.ServeEngine):
                                     stop_tokens=self._stop,
                                     pad_id=self.pad_id, table=table)
 
-        self._segment = jax.jit(seg)
-        self._reset = jax.jit(paged_reset)
-        self._copy = jax.jit(copy_page)
+        sh = self._segment_shardings()
+        if sh is None:
+            self._cache_sh = None
+            self._segment = jax.jit(seg)
+            self._reset = jax.jit(paged_reset)
+            self._copy = jax.jit(copy_page)
+        else:
+            # page copy/COW become sharded programs over the same pool
+            # layout — each device moves only its own head (or in-page)
+            # slice, no gather to one device
+            in_sh, out_sh = sh
+            csh, r = in_sh[0], par.ns()
+            self._cache_sh = csh
+            self._segment = jax.jit(seg, in_shardings=in_sh,
+                                    out_shardings=out_sh)
+            self._reset = jax.jit(paged_reset, in_shardings=(csh, r, r),
+                                  out_shardings=csh)
+            self._copy = jax.jit(copy_page, in_shardings=(csh, r, r, r),
+                                 out_shardings=csh)
+            # commit the persistent pool to its sharding NOW: the first
+            # admit otherwise sees uncommitted arrays and compiles a second
+            # reset signature, breaking the bounded-program guarantee
+            self._pool_cache = jax.device_put(self._pool_cache, csh)
 
     def compiled_programs(self) -> Dict[str, int]:
         return {"segment": self._segment._cache_size(),

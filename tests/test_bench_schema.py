@@ -1,0 +1,44 @@
+"""Every committed ``BENCH_*.json`` conforms to the ``benchmarks/run.py
+--json`` schema: ``{suite: [{name, value, derived}, ...]}``.
+
+The BENCH files are the repo's measured claims (program-size flatness,
+tok/s, prefix-hit rates) and downstream tooling parses them; a hand-edited
+or truncated file should fail tier-1, not silently skew a comparison.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_FILES = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+
+
+def test_bench_files_exist():
+    assert BENCH_FILES, "no BENCH_*.json committed at the repo root"
+
+
+@pytest.mark.parametrize("path", BENCH_FILES,
+                         ids=[os.path.basename(p) for p in BENCH_FILES])
+def test_bench_schema(path):
+    with open(path) as f:
+        doc = json.load(f)
+    assert isinstance(doc, dict) and doc, f"{path}: top level must be a " \
+                                          f"non-empty suite dict"
+    for suite, rows in doc.items():
+        assert isinstance(suite, str) and suite
+        assert isinstance(rows, list) and rows, f"{suite}: empty suite"
+        seen = set()
+        for row in rows:
+            assert isinstance(row, dict), f"{suite}: row is not a dict"
+            assert set(row) == {"name", "value", "derived"}, \
+                f"{suite}: bad keys {sorted(row)}"
+            assert isinstance(row["name"], str) and row["name"]
+            assert isinstance(row["value"], (int, float)) \
+                and not isinstance(row["value"], bool), \
+                f"{suite}/{row['name']}: value must be numeric"
+            assert isinstance(row["derived"], str)
+            assert row["name"] not in seen, \
+                f"{suite}: duplicate row name {row['name']}"
+            seen.add(row["name"])
