@@ -65,6 +65,7 @@ def main() -> None:
         "serve": serve_bench.run,
         "paged": serve_bench.run_paged,
         "serve_mesh": serve_bench.run_serve_mesh,
+        "kv_store": serve_bench.run_kv_store,
     }
     sel = args.only or list(suites)
     failures = 0

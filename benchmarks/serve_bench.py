@@ -330,6 +330,108 @@ def shared_prefix_workload(*, prefix_len: int = 1024, requests: int = 8,
     return out
 
 
+def restart_reuse_workload(*, prefix_len: int = 192, requests: int = 6,
+                           suffix: int = 16, slots: int = 2, gen: int = 16,
+                           cp: int = 16, page_size: int = 16,
+                           spill_pages: int = 64, seed: int = 0) -> dict:
+    """The kv-store acceptance workload: serve ``requests`` prompts sharing
+    a ``prefix_len``-token system prompt, persist the prefix cache
+    (``save_kv_store``), then serve the SAME shape of workload from a
+    FRESH engine three ways — cold (no store: the restart penalty),
+    restored (``restore_kv_store``: every request's shared prefix is a
+    radix hit promoted from the spill tier), and the first engine's own
+    in-process re-run as the ceiling.  Outputs must match between cold and
+    restored runs (the promoted pages hold bit-identical KV)."""
+    import tempfile
+
+    import numpy as np
+
+    import jax
+
+    from repro.runtime import paged as PG
+
+    cfg, params, _, _ = _setup()
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=prefix_len).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab_size, size=suffix).tolist()
+               for _ in range(requests)]
+    kw = dict(slots=slots, bucket=prefix_len + suffix, max_new_tokens=gen,
+              segment=1, prefill_chunk=cp, page_size=page_size,
+              spill_pages=spill_pages)
+
+    def fresh():
+        eng = PG.PagedServeEngine(cfg, params, **kw)
+        # absorb compiles on DISJOINT tokens so the measured runs are hot
+        # but their radix state stays untouched by warm-up prefixes
+        w = np.random.default_rng(seed + 1).integers(
+            0, cfg.vocab_size, size=2 * page_size).tolist()
+        eng.generate([w] * 2, key=jax.random.PRNGKey(seed))
+        return eng
+
+    def timed(eng):
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, key=jax.random.PRNGKey(seed))
+        wall = time.perf_counter() - t0
+        st = eng.last_stats
+        return outs, {
+            "tok_per_s": round(sum(len(o) for o in outs) / wall, 1),
+            "hit_rate": round(st["prefix_hit_tokens"]
+                              / max(st["prompt_tokens"], 1), 3),
+            "prefilled_tokens": st["prefilled_tokens"],
+            "spill_promotes": st["spill_promotes"],
+        }
+
+    store = os.path.join(tempfile.mkdtemp(prefix="kv_store_bench"), "kv.npz")
+    first = fresh()
+    cold_out, cold = timed(first)           # restart penalty baseline
+    saved = first.save_kv_store(store)
+
+    restored_eng = fresh()
+    n_restored = restored_eng.restore_kv_store(store)
+    restored_out, restored = timed(restored_eng)
+
+    return {
+        "prefix_len": prefix_len, "requests": requests,
+        "page_size": page_size, "spill_pages": spill_pages,
+        "saved_pages": saved, "restored_pages": n_restored,
+        "cold": cold, "restored": restored,
+        "outputs_match": restored_out == cold_out,
+        "programs": restored_eng.compiled_programs(),
+        "store_bytes": os.path.getsize(store),
+    }
+
+
+def run_kv_store() -> List[str]:
+    """benchmarks.run entry for the ``kv_store`` suite: the restart-reuse
+    workload — a fresh engine restored from a persisted prefix cache must
+    re-serve a shared system prompt as radix hits (> 90% of prompt
+    tokens), at a measured tok/s against the cold-restart baseline."""
+    r = restart_reuse_workload()
+    print(f"kv-store: saved={r['saved_pages']} pages "
+          f"({r['store_bytes']} bytes), restored={r['restored_pages']}; "
+          f"cold hit={r['cold']['hit_rate']} tok/s={r['cold']['tok_per_s']} "
+          f"vs restored hit={r['restored']['hit_rate']} "
+          f"tok/s={r['restored']['tok_per_s']} "
+          f"(promotes={r['restored']['spill_promotes']}, "
+          f"match={r['outputs_match']})")
+    rows = ["bench,name,value,derived"]
+    rows.append(f"bench,kv_store_saved_pages,{r['saved_pages']},pages")
+    rows.append(f"bench,kv_store_restored_pages,{r['restored_pages']},pages")
+    rows.append(f"bench,kv_store_bytes,{r['store_bytes']},bytes")
+    for mode in ("cold", "restored"):
+        m = r[mode]
+        rows.append(f"bench,kv_store_{mode}_tok_per_s,{m['tok_per_s']},tok/s")
+        rows.append(f"bench,kv_store_{mode}_hit_rate,{m['hit_rate']},fraction")
+        rows.append(f"bench,kv_store_{mode}_prefilled_tokens,"
+                    f"{m['prefilled_tokens']},count")
+    rows.append(f"bench,kv_store_restored_promotes,"
+                f"{r['restored']['spill_promotes']},count")
+    rows.append(f"bench,kv_store_outputs_match,{int(r['outputs_match'])},bool")
+    for k, v in r["programs"].items():
+        rows.append(f"bench,kv_store_programs_{k},{v},count")
+    return rows
+
+
 def measure_mesh_segment(data: int, model: int, num_steps: int = 4,
                          page_size: int = 8, devices=None) -> dict:
     """Program size / wall-clock of the SHARDED paged mixed-step segment on

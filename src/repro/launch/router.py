@@ -122,9 +122,14 @@ class ReplicaRouter:
                 try:
                     got = self.replicas[r].generate([prompts[i] for i in idxs])
                 except Exception as e:
+                    # every assignment was accounted in route(); replicas
+                    # after r never reach their own decrement, so drain the
+                    # whole undispatched tail here — a failed workload must
+                    # not leave phantom depth that skews future spills
+                    for r2 in range(r, len(assigned)):
+                        self.depth[r2] -= len(assigned[r2])
                     raise ReplicaFailed(r, e) from e
-                finally:
-                    self.depth[r] -= len(idxs)
+                self.depth[r] -= len(idxs)
                 for i, o in zip(idxs, got):
                     outs[i] = o
                 eng = getattr(self.replicas[r], "last_stats", None) or {}

@@ -21,7 +21,11 @@ the slot-shared paged pool with radix prefix reuse
 (``runtime/paged.py``): ``--page-size`` tokens per page, ``--n-pages``
 physical pages (0 = dense-equivalent), ``--shared-prefix`` prepends a
 common system prompt to every request to exercise the radix hits, and
-the run reports prefix-hit and page-occupancy stats.
+the run reports prefix-hit and page-occupancy stats.  ``--spill-pages N``
+adds the host-resident spill tier (evicted radix pages demote instead of
+dropping) and ``--kv-store PATH`` persists the prefix cache across runs:
+restored at startup when the file exists, saved after the workload — a
+restarted server re-serves a shared system prompt as radix hits.
 
 ``--mesh AxB`` shards each engine over an (A data, B model) device mesh
 (paged pool kv-heads over ``model`` per ``models/serve.py``), ``--replicas
@@ -85,11 +89,23 @@ def _engine_main(args):
     if args.paged:
         from repro.runtime.paged import PagedServeEngine
 
+        spill = args.spill_pages
+        if args.kv_store and not spill:
+            spill = 4 * args.n_pages if args.n_pages else 64  # restore target
         engine = PagedServeEngine(cfg, params, prefill_chunk=args.prefill_chunk,
                                   page_size=args.page_size,
-                                  n_pages=args.n_pages, **kw)
+                                  n_pages=args.n_pages,
+                                  spill_pages=spill, **kw)
         name = (f"paged pool (page_size={engine.page_size}, "
-                f"n_pages={engine.n_pages}, prefill_chunk={engine.cp})")
+                f"n_pages={engine.n_pages}, prefill_chunk={engine.cp}"
+                + (f", spill_pages={spill}" if spill else "") + ")")
+        if args.kv_store:
+            import os
+
+            if os.path.exists(args.kv_store):
+                n = engine.restore_kv_store(args.kv_store)
+                print(f"[kv-store] restored {n} prefix pages from "
+                      f"{args.kv_store}")
     elif args.blocking:
         engine = DL.BlockingServeEngine(cfg, params, **kw)
         name = "blocking baseline"
@@ -121,6 +137,13 @@ def _engine_main(args):
               f"{st['cow_copies']} COW copies, peak occupancy "
               f"{st['pages_peak']}/{engine.n_pages} pages "
               f"({st['radix_pages']} retained in the radix tree)")
+        if st.get("spill_pages"):
+            print(f"  spill tier: {st['spilled_pages']}/{st['spill_pages']} "
+                  f"host pages held, {st['spill_promotes']} promoted back "
+                  f"on-device this run")
+        if args.kv_store:
+            n = engine.save_kv_store(args.kv_store)
+            print(f"[kv-store] saved {n} prefix pages to {args.kv_store}")
 
 
 def _mesh_engine_main(args, cfg, params, prompts):
@@ -145,7 +168,8 @@ def _mesh_engine_main(args, cfg, params, prompts):
               sampling=DL.SamplingConfig(temperature=args.temperature,
                                          top_k=args.top_k))
     if args.paged:
-        kw.update(page_size=args.page_size, n_pages=args.n_pages)
+        kw.update(page_size=args.page_size, n_pages=args.n_pages,
+                  spill_pages=args.spill_pages)
     replicas = []
     for r in range(n):
         par = serve_mesh(data, model, devices=devs[r * per:(r + 1) * per])
@@ -208,6 +232,14 @@ def main():
     ap.add_argument("--n-pages", type=int, default=0,
                     help="with --paged: physical pages in the pool "
                          "(0 = dense-equivalent capacity)")
+    ap.add_argument("--spill-pages", type=int, default=0,
+                    help="with --paged: host-resident spill tier capacity "
+                         "(evicted radix pages demote there instead of "
+                         "dropping; 0 = no tier)")
+    ap.add_argument("--kv-store", default="",
+                    help="with --paged: persist the prefix cache at this "
+                         "path — restored at startup when the file exists, "
+                         "saved after the run (implies a spill tier)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="with --engine: prepend a common system prompt of "
                          "this many tokens to every request (radix hits)")

@@ -45,6 +45,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ModelConfig
 from repro.core.online_softmax import NEG_INF, SoftmaxState, finalize, merge, zero_state
@@ -218,6 +219,40 @@ def cache_shardings(cfg: ModelConfig, par: ParallelContext, cache):
         return par.ns()
 
     return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def pool_leaf_key(path) -> str:
+    """Stable string key for one pool-cache leaf path — ``'pos0/pk'``,
+    ``'tail/0/pkpos'``...  Used wherever a page payload crosses the
+    pytree boundary into plain host dicts (the spill tier, ``page_rows``,
+    ``runtime/paged.py::promote_page``): dict keys sort, so one key scheme
+    means ONE pytree structure and therefore one compiled promote
+    program.  Handles every path-entry flavour (``DictKey.key``,
+    ``SequenceKey.idx``, attr ``name``)."""
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+    return "/".join(parts)
+
+
+def page_rows(cache, pid: int) -> Dict[str, Any]:
+    """One physical page's payload as host numpy rows keyed by
+    ``pool_leaf_key`` — the demotion/persistence read path.  Only pool
+    leaves (``pk``/``pv``/``pkpos``) appear; per-slot dense leaves carry
+    no page state.  Stacked leaves keep their leading cycle dim, so a row
+    is ``[C, ps, hkv, dh]`` / ``[C, ps]`` (or without ``C`` for tail)."""
+    leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+    rows = {}
+    for path, leaf in leaves:
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if names[-1] not in ("pk", "pv") and "pkpos" not in names:
+            continue
+        row = leaf[:, pid] if names[0] != "tail" else leaf[pid]
+        rows[pool_leaf_key(path)] = np.asarray(jax.device_get(row))
+    return rows
 
 
 # ---------------------------------------------------------------------------

@@ -201,6 +201,20 @@ def reset_slot(cache: Params, i) -> Params:
 FREE, PREFILL, DECODE = 0, 1, 2
 
 
+def per_engine(fn):
+    """Per-engine jit identity wrapper.  ``jax.jit``'s dispatch cache is
+    global, keyed by (function, jit params): two engines built with EQUAL
+    shardings over the same module-level function would pool their compile
+    counts, corrupting the ``compiled_programs()`` bounded-set accounting
+    (an engine would "inherit" another engine's compilations).  Wrapping
+    in a fresh function object keeps the count engine-local."""
+    def wrapped(*args):
+        return fn(*args)
+
+    wrapped.__name__ = fn.__name__
+    return wrapped
+
+
 def mixed_segment(cfg: ModelConfig, par: Optional[ParallelContext], params: Params,
                   cache: Params, mode: jnp.ndarray, tok: jnp.ndarray,
                   pos: jnp.ndarray, key: jnp.ndarray, rem: jnp.ndarray,
@@ -338,7 +352,11 @@ class ServeEngine:
     ``_admit`` / ``_dispatch`` / ``_post_dispatch`` / ``_release`` /
     ``_end``) so ``runtime/paged.py::PagedServeEngine`` can swap the dense
     per-slot cache for the slot-shared paged pool without touching the
-    scheduler itself.
+    scheduler itself.  An ``_admit`` override may dispatch extra
+    cache-maintenance work from its admit plan (page invalidation, COW
+    copies, promote-from-spill scatters) — each through ONE jitted
+    program, so the compiled set stays bounded at segment + reset (+ the
+    paged engine's copy and promote).
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, *, slots: int,
@@ -384,15 +402,15 @@ class ServeEngine:
         if sh is None:
             self._cache_sh = None
             self._segment = jax.jit(seg)
-            self._reset = jax.jit(reset_slot)
+            self._reset = jax.jit(per_engine(reset_slot))
         else:
             in_sh, out_sh = sh
             csh, r = in_sh[0], self.par.ns()
             self._cache_sh = csh
             self._segment = jax.jit(seg, in_shardings=in_sh,
                                     out_shardings=out_sh)
-            self._reset = jax.jit(reset_slot, in_shardings=(csh, r),
-                                  out_shardings=csh)
+            self._reset = jax.jit(per_engine(reset_slot),
+                                  in_shardings=(csh, r), out_shardings=csh)
 
     # -- helpers ---------------------------------------------------------
     def compiled_programs(self) -> Dict[str, int]:
@@ -438,7 +456,10 @@ class ServeEngine:
         tokens are ALREADY cached (prefill starts there; dense: 0).  May
         return ``None`` to defer the request when resources are
         momentarily exhausted — only legal while other slots are still
-        ``active`` (they will free resources); otherwise raise."""
+        ``active`` (they will free resources); otherwise raise.  Any
+        device work the admission implies (paged: fresh-page resets, COW
+        copies, spill-tier promote scatters) is dispatched here, before
+        the slot's first segment sees the cache."""
         self.last_stats["resets"] += 1
         return self._reset(cache, s), 0
 

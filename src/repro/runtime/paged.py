@@ -17,6 +17,14 @@ full-attention blocks with one slot-SHARED pool of fixed-size pages
   copy-free sharing; the tree holds one refcount per page it references,
   so cached prefixes survive the requests that created them until evicted
   (LRU leaves first, and only pages nobody else maps).
+* ``SpillPool`` — host-resident spill tier behind the radix tree
+  (Mooncake-style tiered KV): with ``spill_pages > 0`` eviction DEMOTES a
+  cold prefix page's payload host-side instead of dropping it, the next
+  prefix hit PROMOTES it back into a fresh device page through one jitted
+  ``promote_page`` scatter, and ``save``/``restore`` persist the whole
+  prefix cache (tree + payloads) across engine restarts — a second
+  process serving the same system prompt starts with radix hits, not
+  cold prefills.
 * ``PagedCacheManager`` — per-slot page tables (``[slots, max_pages]``
   int32; ``-1`` = unmapped, FREE rows point at the trash page), admission
   control (a request's full page reserve is allocated up front, so the
@@ -40,7 +48,8 @@ See ``docs/serving.md`` (paged-pool section) for the lifecycle diagram.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -113,6 +122,63 @@ class PagePool:
 
 
 # ---------------------------------------------------------------------------
+# host-resident spill tier
+# ---------------------------------------------------------------------------
+
+
+class SpillPool:
+    """Host-resident spill tier: ``n_spill`` page-payload slots in plain
+    host (numpy) buffers, one buffer per pool leaf, allocated lazily from
+    the first demoted page's rows so the pool knows nothing about model
+    shapes.  The radix tree demotes cold evicted pages here instead of
+    dropping them and promotes them back into device pages on the next
+    prefix hit; payloads round-trip ``RadixTree.save``/``restore`` so a
+    prefix cache survives engine restarts.  Refcount-free by design: the
+    tree is the sole owner of every spill entry."""
+
+    def __init__(self, n_spill: int):
+        if n_spill < 1:
+            raise ValueError(f"n_spill must be >= 1, got {n_spill}")
+        self.n_spill = n_spill
+        self._free = list(range(n_spill - 1, -1, -1))  # stack: slot 0 first
+        self.data: Dict[str, np.ndarray] = {}  # leaf path -> [n_spill, ...]
+        self.demotions = 0  # payload writes to date (demotes + restores)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_spill - len(self._free)
+
+    def alloc(self) -> int:
+        """A free spill slot, or ``-1`` when the tier is full — the caller
+        then falls back to dropping the page, so spill never blocks
+        eviction."""
+        return self._free.pop() if self._free else -1
+
+    def free(self, sid: int) -> None:
+        if sid in self._free:
+            raise ValueError(f"free of unallocated spill slot {sid}")
+        self._free.append(sid)
+
+    def write(self, sid: int, rows: Dict[str, np.ndarray]) -> None:
+        """Store one page's rows (``models/serve.py::page_rows`` keys)."""
+        for k, row in rows.items():
+            buf = self.data.get(k)
+            if buf is None:
+                row = np.asarray(row)
+                buf = np.zeros((self.n_spill, *row.shape), row.dtype)
+                self.data[k] = buf
+            buf[sid] = row
+        self.demotions += 1
+
+    def read(self, sid: int) -> Dict[str, np.ndarray]:
+        return {k: buf[sid] for k, buf in self.data.items()}
+
+
+# ---------------------------------------------------------------------------
 # radix tree (full-page prefix index)
 # ---------------------------------------------------------------------------
 
@@ -124,13 +190,14 @@ def _page_key(tokens) -> bytes:
 
 
 class _Node:
-    __slots__ = ("children", "parent", "key", "page", "last_used")
+    __slots__ = ("children", "parent", "key", "page", "spill", "last_used")
 
     def __init__(self, parent: Optional["_Node"] = None,
                  key: Optional[bytes] = None):
         self.children: Dict[bytes, "_Node"] = {}
         self.parent, self.key = parent, key
-        self.page = -1
+        self.page = -1   # device page, or -1 when demoted to the spill tier
+        self.spill = -1  # spill slot, or -1 when device-resident
         self.last_used = 0
 
 
@@ -141,38 +208,63 @@ class RadixTree:
     to its slot, so shared pages are immutable by construction (writes
     only ever target the suffix a request prefills itself, or go through
     copy-on-write).  The tree owns one refcount per referenced page.
+
+    With a :class:`SpillPool`, every node is either device-resident
+    (``page >= 0``) or spilled (``spill >= 0``); along any root-to-leaf
+    path the resident nodes form a prefix (demotion runs suffix-first,
+    promotion re-admits a whole matched chain), so the device tier is
+    always a connected top slice of the tree.  Demotion copies a page's
+    payload host-side through ``read_page`` — set by the engine, it
+    fetches one physical page of the live pool — at evict time, BEFORE
+    the freed device page can be reallocated.
     """
 
-    def __init__(self, page_size: int, pool: PagePool):
+    def __init__(self, page_size: int, pool: PagePool,
+                 spill: Optional[SpillPool] = None):
         self.page_size, self.pool = page_size, pool
+        self.spill = spill
+        self.read_page: Optional[Callable[[int], Dict[str, np.ndarray]]] = None
         self.root = _Node()
         self._clock = 0
-        self.pages = 0  # pages the tree currently references
+        self.pages = 0  # device pages the tree currently references
+
+    @property
+    def spilled(self) -> int:
+        return self.spill.used_count if self.spill is not None else 0
 
     def _tick(self) -> int:
         self._clock += 1
         return self._clock
 
-    def match(self, tokens: Sequence[int]) -> List[int]:
-        """Physical pages holding the longest already-indexed full-page
-        prefix of ``tokens``.  Touches LRU stamps; takes NO refcounts —
-        the caller shares what it actually maps."""
+    def match_nodes(self, tokens: Sequence[int]) -> List[_Node]:
+        """Node chain of the longest already-indexed full-page prefix of
+        ``tokens`` — entries may be device-resident (``page >= 0``) or
+        spilled (``spill >= 0``; the manager promotes those at admit).
+        Touches LRU stamps; takes NO refcounts — the caller shares what it
+        actually maps."""
         ps = self.page_size
-        node, pids, t = self.root, [], self._tick()
+        node, out, t = self.root, [], self._tick()
         for i in range(len(tokens) // ps):
             child = node.children.get(_page_key(tokens[i * ps:(i + 1) * ps]))
             if child is None:
                 break
             child.last_used = t
-            pids.append(child.page)
+            out.append(child)
             node = child
-        return pids
+        return out
+
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Physical pages holding the longest already-indexed full-page
+        prefix of ``tokens`` (device view: spilled entries report -1)."""
+        return [nd.page for nd in self.match_nodes(tokens)]
 
     def insert(self, tokens: Sequence[int], pids: Sequence[int]) -> int:
         """Index ``pids`` as holding the leading full pages of ``tokens``.
-        Existing nodes win (first prefill published; contents are
-        identical by construction) and take no extra reference.  Returns
-        how many pages were newly indexed."""
+        Existing resident nodes win (first prefill published; contents are
+        identical by construction) and take no extra reference; an
+        existing SPILLED twin is re-pointed at the freshly prefilled
+        device page instead (a free promotion — the host copy is dropped).
+        Returns how many pages were newly device-indexed."""
         ps = self.page_size
         node, t, added = self.root, self._tick(), 0
         for i, pid in enumerate(pids):
@@ -185,37 +277,204 @@ class RadixTree:
                 self.pool.share(int(pid))
                 self.pages += 1
                 added += 1
+            elif child.page < 0:
+                child.page = int(pid)
+                self.pool.share(int(pid))
+                self.pages += 1
+                if self.spill is not None:
+                    self.spill.free(child.spill)
+                child.spill = -1
+                added += 1
             child.last_used = t
             node = child
         return added
+
+    def promote(self, nd: _Node, pid: int) -> int:
+        """Re-admit spilled node ``nd`` at device page ``pid`` (the tree
+        takes over the caller's freshly allocated reference).  Returns the
+        spill slot whose payload must be scattered into ``pid`` — the
+        caller frees it only AFTER that copy is dispatched."""
+        sid = nd.spill
+        nd.page, nd.spill = int(pid), -1
+        self.pages += 1
+        return sid
+
+    def _evictable(self, nd: _Node) -> bool:
+        """Device-resident, tree-only reference, and no device-resident
+        child — residency is a path prefix (see class docstring), so
+        childless-in-the-device-tier means leaf of the device tier."""
+        return (nd.page >= 0
+                and int(self.pool.refcount[nd.page]) == 1
+                and not any(c.page >= 0 for c in nd.children.values()))
 
     def _evictable_leaves(self) -> List[_Node]:
         out, stack = [], [self.root]
         while stack:
             nd = stack.pop()
-            for c in nd.children.values():
-                if c.children:
-                    stack.append(c)
-                elif int(self.pool.refcount[c.page]) == 1:  # tree-only ref
-                    out.append(c)
+            stack.extend(nd.children.values())
+            if nd is not self.root and self._evictable(nd):
+                out.append(nd)
         return out
 
     def evict(self, n_pages: int) -> int:
-        """Drop up to ``n_pages`` least-recently-used leaf pages whose only
-        reference is the tree's own.  Interior nodes become evictable as
-        their children go (suffix-first, so a surviving node always has
-        its whole prefix chain intact).  Returns pages actually freed."""
+        """Free up to ``n_pages`` least-recently-used device pages whose
+        only reference is the tree's own, in ONE pass: the evictable set
+        is collected once and maintained incrementally on a heap (a parent
+        joins when its last device-resident child leaves) instead of
+        re-walking the whole tree per freed page.  Candidate stamps are
+        unique — equal stamps only occur along one ancestor chain, never
+        between two simultaneously evictable nodes — so the heap
+        reproduces the old rescan-per-page order exactly (property-pinned
+        in ``tests/test_paged.py``).
+
+        With a spill tier, each victim's payload is demoted host-side
+        through ``read_page`` (synchronously — the freed device page may
+        be reallocated and overwritten within the same admit) and the node
+        survives as a spilled entry; without one, or when the tier is
+        full, the node is dropped as before (a node whose spilled children
+        would be stranded by a drop stays resident instead).  Returns
+        device pages actually freed."""
+        heap: List[Tuple[int, int, _Node]] = []
+        n = 0
+
+        def push(nd: _Node) -> None:
+            nonlocal n
+            if nd is not self.root and self._evictable(nd):
+                n += 1
+                heapq.heappush(heap, (nd.last_used, n, nd))
+
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            push(nd)
+        can_spill = self.spill is not None and self.read_page is not None
         freed = 0
-        while freed < n_pages:
-            leaves = self._evictable_leaves()
-            if not leaves:
-                break
-            victim = min(leaves, key=lambda nd: nd.last_used)
-            del victim.parent.children[victim.key]
-            self.pool.release(victim.page)
+        while freed < n_pages and heap:
+            _, _, victim = heapq.heappop(heap)
+            if not self._evictable(victim):
+                continue  # stale heap entry
+            sid = self.spill.alloc() if can_spill else -1
+            if sid >= 0:
+                self.spill.write(sid, self.read_page(victim.page))
+                self.pool.release(victim.page)
+                victim.page, victim.spill = -1, sid
+            elif victim.children:
+                continue  # drop would strand spilled descendants: keep
+            else:
+                del victim.parent.children[victim.key]
+                self.pool.release(victim.page)
             self.pages -= 1
             freed += 1
+            push(victim.parent)
         return freed
+
+    # -- persistence -----------------------------------------------------
+    def save(self, path: str, read_page: Optional[Callable] = None) -> int:
+        """Serialize the whole prefix cache — tree structure, LRU stamps,
+        and every indexed page's KV payload (spilled entries straight from
+        the spill tier, device-resident ones fetched through
+        ``read_page``) — into one ``.npz``.  Format (docs/serving.md):
+        ``page_size`` scalar, ``parent`` [N] int64 node-list indices
+        (-1 = root; parents always precede children), ``tokens`` [N, ps]
+        int32 page keys, ``last_used`` [N] int64, plus one
+        ``rows/<leaf path>`` [N, ...] array per pool leaf.  Returns the
+        number of pages saved."""
+        read_page = read_page or self.read_page
+        order: List[_Node] = []
+        index: Dict[int, int] = {id(self.root): -1}
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            for c in nd.children.values():
+                index[id(c)] = len(order)
+                order.append(c)
+                stack.append(c)
+        ps = self.page_size
+        payload: Dict[str, List[np.ndarray]] = {}
+        for nd in order:
+            if nd.page >= 0:
+                if read_page is None:
+                    raise ValueError(
+                        "save needs a read_page callback to fetch "
+                        "device-resident pages (the engine's page reader)")
+                rows = read_page(nd.page)
+            else:
+                rows = self.spill.read(nd.spill)
+            for k, v in rows.items():
+                payload.setdefault(k, []).append(np.asarray(v))
+        # extension dtypes (bfloat16, fp8) round-trip npz as opaque void —
+        # store them bit-cast to a same-width uint plus the dtype name
+        stacks = {}
+        for k, v in payload.items():
+            arr = np.stack(v)
+            if arr.dtype.kind not in "fiub":
+                stacks[f"dtype/{k}"] = np.str_(arr.dtype.name)
+                arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+            stacks[f"rows/{k}"] = arr
+        np.savez(
+            path, page_size=np.int64(ps),
+            parent=np.array([index[id(nd.parent)] for nd in order], np.int64),
+            tokens=(np.stack([np.frombuffer(nd.key, np.int32) for nd in order])
+                    if order else np.zeros((0, ps), np.int32)),
+            last_used=np.array([nd.last_used for nd in order], np.int64),
+            **stacks)
+        return len(order)
+
+    def restore(self, path: str) -> int:
+        """Load a saved prefix cache.  Every restored page lands in the
+        SPILL tier — no device pages are touched; payloads promote on
+        their first prefix hit — and live entries win over colliding saved
+        ones.  Entries beyond the tier's free slots are dropped (children
+        of a dropped node follow it).  Returns pages actually restored."""
+        if self.spill is None:
+            raise ValueError(
+                "restore needs a spill tier (spill_pages > 0): restored "
+                "pages are host-resident until their first prefix hit")
+        data = np.load(path)
+        ps = int(data["page_size"])
+        if ps != self.page_size:
+            raise ValueError(f"kv store was saved at page_size={ps}; this "
+                             f"pool uses page_size={self.page_size}")
+        parents, tokens = data["parent"], data["tokens"]
+        stamps = data["last_used"]
+        row_keys = [k for k in data.files if k.startswith("rows/")]
+        dtypes = {}
+        for k in row_keys:
+            dk = "dtype/" + k[len("rows/"):]
+            if dk in data.files:  # bit-cast extension dtype (e.g. bfloat16)
+                import ml_dtypes  # jax dependency
+
+                dtypes[k] = np.dtype(getattr(ml_dtypes, str(data[dk])))
+
+        def rows_at(i: int) -> Dict[str, np.ndarray]:
+            return {k[len("rows/"):]:
+                    (data[k][i].view(dtypes[k]) if k in dtypes else data[k][i])
+                    for k in row_keys}
+        nodes: List[Optional[_Node]] = [None] * len(parents)
+        restored = 0
+        for i in range(len(parents)):
+            pnode = self.root if parents[i] < 0 else nodes[int(parents[i])]
+            if pnode is None:  # parent dropped/unrestorable: drop subtree
+                continue
+            key = tokens[i].tobytes()
+            child = pnode.children.get(key)
+            if child is not None:  # live entry wins over the stored twin
+                nodes[i] = child
+                continue
+            sid = self.spill.alloc()
+            if sid < 0:
+                continue  # tier full: drop (descendants follow)
+            self.spill.write(sid, rows_at(i))
+            child = _Node(parent=pnode, key=key)
+            child.spill = sid
+            child.last_used = int(stamps[i])
+            pnode.children[key] = child
+            nodes[i] = child
+            restored += 1
+        if len(stamps):
+            self._clock = max(self._clock, int(stamps.max()) + 1)
+        return restored
 
 
 # ---------------------------------------------------------------------------
@@ -226,12 +485,23 @@ class RadixTree:
 @dataclasses.dataclass
 class AdmitPlan:
     """Host-side result of admitting one request: what the engine must
-    dispatch to the device before the slot's first segment."""
+    dispatch to the device before the slot's first segment.  Demotions
+    never appear here — eviction copies payloads host-side synchronously
+    (the freed page may be reallocated within this very plan); promotions
+    are work lists because the scatter targets freshly allocated device
+    pages this plan owns."""
 
     resume: int                        # prompt tokens already cached (skip)
     fresh_pages: List[int]             # newly allocated -> need invalidation
     cow: List[Tuple[int, int]]         # (src, dst) page copies to dispatch
     hit_pages: int                     # full pages served from the tree
+    # (spill slot, dst page, keep-below offset) scatters to dispatch:
+    # promote-from-spill re-admissions (keep = page_size) and the
+    # spilled-COW variant (keep = resume % page_size, tail recomputed)
+    promote: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)
+    # spill slots to return once the promote scatters are dispatched
+    free_spill: List[int] = dataclasses.field(default_factory=list)
 
 
 class PagedCacheManager:
@@ -246,15 +516,27 @@ class PagedCacheManager:
     ``PoolExhausted``.
     """
 
-    def __init__(self, n_pages: int, page_size: int, use_radix: bool = True):
+    def __init__(self, n_pages: int, page_size: int, use_radix: bool = True,
+                 spill_pages: int = 0):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.pool = PagePool(n_pages)
         self.page_size = page_size
-        self.radix = RadixTree(page_size, self.pool) if use_radix else None
+        self.spill = (SpillPool(spill_pages)
+                      if use_radix and spill_pages > 0 else None)
+        self.radix = (RadixTree(page_size, self.pool, spill=self.spill)
+                      if use_radix else None)
         self.trash = n_pages  # physical index of the FREE-slot write sink
         self.table: Optional[np.ndarray] = None
         self._slot_pages: List[List[int]] = []
+
+    def set_page_reader(self, read_page: Callable[[int], Dict[str, np.ndarray]]
+                        ) -> None:
+        """Register the engine's device->host page fetch
+        (``models/serve.py::page_rows`` over the live pool) — eviction
+        demotes and ``save`` serializes resident pages through it."""
+        if self.radix is not None:
+            self.radix.read_page = read_page
 
     def begin(self, slots: int, max_pages: int) -> None:
         """Start a workload: fresh all-FREE tables.  Slots a previous
@@ -287,42 +569,66 @@ class PagedCacheManager:
                 f"{label}: needs {need} pages ({plen} prompt + {budget} new "
                 f"tokens at page_size={ps}) but the table is only "
                 f"{self.table.shape[1]} pages wide")
-        matched = self.radix.match(tokens) if self.radix is not None else []
-        m = len(matched)
+        nodes = (self.radix.match_nodes(tokens)
+                 if self.radix is not None else [])
+        m = len(nodes)
         resume = min(m * ps, max(plen - 1, 0))
         n_shared = m if resume == m * ps else m - 1
-        shared = matched[:n_shared]
-        cow_src = matched[n_shared:]  # 0 or 1 page (the full-cover case)
-        # take refs on EVERY matched page first — the shared ones we keep
-        # AND the COW source (its protective ref is dropped once the copy
-        # pair is recorded) — so eviction can't free a page the plan reads
-        for pid in (*shared, *cow_src):
-            self.pool.share(pid)
-        fresh_needed = need - n_shared
+        shared = nodes[:n_shared]
+        cow_src = nodes[n_shared:]  # 0 or 1 node (the full-cover case)
+        # take refs on every RESIDENT matched page first — the shared ones
+        # we keep AND the COW source (its protective ref is dropped once
+        # the copy pair is recorded) — so eviction can't free a page the
+        # plan reads.  Spilled entries have no device page to protect, and
+        # eviction never touches the spill tier.
+        for nd in (*shared, *cow_src):
+            if nd.page >= 0:
+                self.pool.share(nd.page)
+        # device pages to allocate: the non-shared remainder of the
+        # reserve, plus one promote target per spilled shared page
+        fresh_needed = (need - n_shared
+                        + sum(1 for nd in shared if nd.page < 0))
         if self.pool.free_count < fresh_needed and self.radix is not None:
             self.radix.evict(fresh_needed - self.pool.free_count)
         if self.pool.free_count < fresh_needed:
-            for pid in (*shared, *cow_src):
-                self.pool.release(pid)
+            for nd in (*shared, *cow_src):
+                if nd.page >= 0:
+                    self.pool.release(nd.page)
             raise PoolExhausted(
                 f"{label}: needs {fresh_needed} free pages ({plen} prompt + "
                 f"{budget} new tokens at page_size={ps}, {n_shared} prefix "
                 f"pages shared) but only {self.pool.free_count} of "
                 f"{self.pool.n_pages} are free")
+        promote: List[Tuple[int, int, int]] = []
+        free_spill: List[int] = []
+        pids: List[int] = []
+        for nd in shared:
+            if nd.page < 0:  # spilled prefix page: promote back on-device
+                pid = self.pool.alloc()        # becomes the tree's reference
+                sid = self.radix.promote(nd, pid)
+                promote.append((sid, pid, ps))  # keep the whole page
+                free_spill.append(sid)
+                self.pool.share(pid)           # the slot's reference
+            pids.append(nd.page)
         cow: List[Tuple[int, int]] = []
-        pids = list(shared)
         if cow_src:
+            nd = cow_src[0]
             dst = self.pool.alloc()
-            cow.append((int(cow_src[0]), dst))
+            if nd.page < 0:
+                # spilled COW source: scatter the payload STRAIGHT into the
+                # slot's private dst page (the tree's copy stays spilled)
+                promote.append((nd.spill, dst, resume % ps))
+            else:
+                cow.append((nd.page, dst))
+                self.pool.release(nd.page)  # drop the protective ref
             pids.append(dst)
-            self.pool.release(int(cow_src[0]))  # drop the protective ref
         fresh = [self.pool.alloc() for _ in range(need - len(pids))]
         pids.extend(fresh)
         self.table[slot, :] = -1
         self.table[slot, :need] = pids
         self._slot_pages[slot] = pids
         return AdmitPlan(resume=resume, fresh_pages=fresh, cow=cow,
-                         hit_pages=m)
+                         hit_pages=m, promote=promote, free_spill=free_spill)
 
     def release(self, slot: int) -> None:
         """Return the slot's pages (tree-shared ones survive via their
@@ -365,6 +671,28 @@ class PagedCacheManager:
     @property
     def pages_in_use(self) -> int:
         return self.pool.used_count
+
+    @property
+    def spilled_pages(self) -> int:
+        return self.spill.used_count if self.spill is not None else 0
+
+    # -- persistence -----------------------------------------------------
+    def save(self, path: str,
+             read_page: Optional[Callable] = None) -> int:
+        """Persist the prefix cache (radix tree + page payloads) to
+        ``path``; see ``RadixTree.save`` for the format."""
+        if self.radix is None:
+            raise ValueError("save: this pool has no radix prefix cache "
+                             "(use_radix=False)")
+        return self.radix.save(path, read_page)
+
+    def restore(self, path: str) -> int:
+        """Load a persisted prefix cache into the spill tier (requires
+        ``spill_pages > 0``); pages promote on their first prefix hit."""
+        if self.radix is None:
+            raise ValueError("restore: this pool has no radix prefix cache "
+                             "(use_radix=False)")
+        return self.radix.restore(path)
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +750,36 @@ def copy_page(cache: Params, src, dst, drop_from) -> Params:
     return jax.tree_util.tree_map_with_path(fix, cache)
 
 
+def promote_page(cache: Params, dst, rows: Dict[str, jnp.ndarray],
+                 keep_below) -> Params:
+    """Scatter one spilled page's host rows into physical page ``dst`` —
+    the spill tier's re-admit primitive, the exact inverse of the
+    ``models/serve.py::page_rows`` demotion gather (``rows`` is keyed by
+    ``pool_leaf_key``).  ``pkpos`` entries at in-page offsets
+    ``>= keep_below`` are invalidated in the scatter: a plain re-admit
+    passes ``page_size`` (keep everything), the spilled-COW path passes
+    the resume offset so the tail the resumed prefill recomputes is not
+    double-counted (mirroring ``copy_page``'s ``drop_from``)."""
+    keep = None
+
+    def fix(path, leaf):
+        nonlocal keep
+        names = _leaf_names(path)
+        kind = names[-1]
+        if kind not in ("pk", "pv", "pkpos"):
+            return leaf
+        row = jnp.asarray(rows[SV.pool_leaf_key(path)])
+        if kind == "pkpos":
+            ps = leaf.shape[-1]
+            if keep is None:
+                keep = jnp.arange(ps) < keep_below
+            row = jnp.where(keep, row, -1)
+        stacked = names[0] != "tail"
+        return leaf.at[:, dst].set(row) if stacked else leaf.at[dst].set(row)
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -433,21 +791,29 @@ class PagedServeEngine(DL.ServeEngine):
     Same fused mixed-step scheduler as ``ServeEngine`` — the segment
     program just reads/writes attention K/V through the page table, so
     ``compiled_programs()`` stays a bounded set (one segment, one
-    reset-and-invalidate, one COW copy) and program size is flat in
-    ``n_pages`` (the pool only changes array DIMENSIONS; the page loop is
-    ``fori_double_buffered`` over logical pages).  What changes is the
-    slot lifecycle:
+    reset-and-invalidate, one COW copy, one promote-from-spill scatter)
+    and program size is flat in ``n_pages`` (the pool only changes array
+    DIMENSIONS; the page loop is ``fori_double_buffered`` over logical
+    pages).  What changes is the slot lifecycle:
 
       admit   — radix-match the prompt, map shared prefix pages copy-free
-                (prefill resumes AFTER them), allocate the rest of the
-                worst-case reserve, invalidate fresh pages, dispatch COW
-                copies.  A request that cannot fit defers while other
-                slots hold pages and raises ``ValueError`` (naming it)
-                when the pool could never take it.
+                (prefill resumes AFTER them; spilled prefix pages are
+                promoted back into fresh device pages first), allocate
+                the rest of the worst-case reserve, invalidate fresh
+                pages, dispatch COW copies and promote scatters.  A
+                request that cannot fit defers while other slots hold
+                pages and raises ``ValueError`` (naming it) when the pool
+                could never take it.
       release — refcount-release the slot's pages; radix-published prefix
                 pages survive for future requests (two-tier: with
                 ``n_host_chunks > 0`` the pool itself is host-resident
                 and pages stream device-ward inside attention).
+
+    With ``spill_pages > 0`` eviction demotes cold radix pages into the
+    host-resident :class:`SpillPool` instead of dropping them, and
+    ``save_kv_store``/``restore_kv_store`` persist the prefix cache
+    across engine restarts — a second process serving the same system
+    prompt gets radix hits, not cold prefills.
 
     ``radix=True`` only takes effect for pure global-attention layouts:
     recurrent blocks (ssm/rglru/local_attn ring) integrate the whole
@@ -462,7 +828,7 @@ class PagedServeEngine(DL.ServeEngine):
 
     def __init__(self, cfg: ModelConfig, params: Params, *, slots: int,
                  bucket: int, max_new_tokens: int, page_size: int = 16,
-                 n_pages: int = 0, radix: bool = True,
+                 n_pages: int = 0, radix: bool = True, spill_pages: int = 0,
                  prefill_chunk: int = 0, n_host_chunks: int = 0,
                  sampling: DL.SamplingConfig = DL.GREEDY,
                  stop_tokens: Sequence[int] = (), pad_id: int = 0,
@@ -476,10 +842,16 @@ class PagedServeEngine(DL.ServeEngine):
         pat, _, tail = layout_of(cfg)
         self.radix_enabled = bool(radix) and all(
             k == "attn" for k in (*pat, *tail))
-        self.kv = PagedCacheManager(self.n_pages, self.page_size,
-                                    use_radix=self.radix_enabled)
+        self.kv = PagedCacheManager(
+            self.n_pages, self.page_size, use_radix=self.radix_enabled,
+            spill_pages=spill_pages if self.radix_enabled else 0)
+        self.kv.set_page_reader(self._read_page)
         self._pool_cache = SV.init_paged_cache(cfg, slots, self.n_pages,
                                                self.page_size)
+        # freshest pool view for host-side page reads (demotion at evict
+        # time, save_kv_store): re-pointed after every program that writes
+        # the pool so read_page never sees a stale page payload
+        self._cur_cache = self._pool_cache
         self._table_dev = None  # device copy, refreshed at admit/release
         self._inserted = [True] * slots
         super().__init__(cfg, params, slots=slots, bucket=bucket,
@@ -498,6 +870,21 @@ class PagedServeEngine(DL.ServeEngine):
         # two-tier placement: the cold pool lives host-side; attention
         # streams gathered pages device-ward (no-op on CPU)
         self._pool_cache = self._offload_pool(self._pool_cache)
+        self._cur_cache = self._pool_cache
+
+    def _read_page(self, pid: int) -> Dict[str, np.ndarray]:
+        """Fetch one physical page's K/V rows host-side (demotion + save)."""
+        return SV.page_rows(self._cur_cache, int(pid))
+
+    # -- prefix-cache persistence ----------------------------------------
+    def save_kv_store(self, path: str) -> int:
+        """Persist the radix tree + every cached page payload to ``path``."""
+        return self.kv.save(path, self._read_page)
+
+    def restore_kv_store(self, path: str) -> int:
+        """Load a persisted prefix cache into the spill tier (pages promote
+        to device lazily, on their first radix hit)."""
+        return self.kv.restore(path)
 
     def _offload_pool(self, cache):
         """Park the pool's K/V leaves in the offload tier when the engine
@@ -508,14 +895,30 @@ class PagedServeEngine(DL.ServeEngine):
             return cache
 
         # host-placement custom-calls reject PARTIAL replication: on a
-        # mesh the parked pool must shard over EVERY axis, so spread the
-        # in-page dim across all of them (pages always divide evenly when
-        # ps does); off-mesh the spec is empty and to_host is a plain put
+        # mesh the parked pool must shard over EVERY axis.  Prefer the
+        # in-page dim (pages always divide evenly when ps does), fall back
+        # to kv heads, then the page-count dim; when NO dim divides, a
+        # single-device spec would silently gather a mesh-sharded pool to
+        # one host buffer — skip the offload instead and say so once
         spec = ()
         if self.par.mesh is not None:
+            n = self.par.mesh.size
             all_axes = tuple(self.par.mesh.axis_names)
-            if self.page_size % self.par.mesh.size == 0:
+            if self.page_size % n == 0:
                 spec = (None, all_axes, None, None)
+            elif self.cfg.num_kv_heads % n == 0:
+                spec = (None, None, all_axes, None)
+            elif (self.n_pages + 1) % n == 0:
+                spec = (all_axes, None, None, None)
+            else:
+                from repro.runtime.placement import _warn_once
+                _warn_once(
+                    "paged-offload-indivisible",
+                    f"pool offload skipped: no pool dim (page_size="
+                    f"{self.page_size}, kv_heads={self.cfg.num_kv_heads}, "
+                    f"pages+1={self.n_pages + 1}) divides mesh size {n}; "
+                    f"the pool stays in device memory")
+                return cache
 
         def offload(path, leaf):
             names = _leaf_names(path)
@@ -553,8 +956,9 @@ class PagedServeEngine(DL.ServeEngine):
         if sh is None:
             self._cache_sh = None
             self._segment = jax.jit(seg)
-            self._reset = jax.jit(paged_reset)
-            self._copy = jax.jit(copy_page)
+            self._reset = jax.jit(DL.per_engine(paged_reset))
+            self._copy = jax.jit(DL.per_engine(copy_page))
+            self._promote = jax.jit(DL.per_engine(promote_page))
         else:
             # page copy/COW become sharded programs over the same pool
             # layout — each device moves only its own head (or in-page)
@@ -564,10 +968,17 @@ class PagedServeEngine(DL.ServeEngine):
             self._cache_sh = csh
             self._segment = jax.jit(seg, in_shardings=in_sh,
                                     out_shardings=out_sh)
-            self._reset = jax.jit(paged_reset, in_shardings=(csh, r, r),
-                                  out_shardings=csh)
-            self._copy = jax.jit(copy_page, in_shardings=(csh, r, r, r),
+            self._reset = jax.jit(DL.per_engine(paged_reset),
+                                  in_shardings=(csh, r, r), out_shardings=csh)
+            self._copy = jax.jit(DL.per_engine(copy_page),
+                                 in_shardings=(csh, r, r, r),
                                  out_shardings=csh)
+            # the promoted rows dict gets `r` as a pytree PREFIX: every
+            # host-staged row enters replicated, the scatter re-shards it
+            # into the pool's own layout
+            self._promote = jax.jit(DL.per_engine(promote_page),
+                                    in_shardings=(csh, r, r, r),
+                                    out_shardings=csh)
             # commit the persistent pool to its sharding NOW: the first
             # admit otherwise sees uncommitted arrays and compiles a second
             # reset signature, breaking the bounded-program guarantee
@@ -576,7 +987,8 @@ class PagedServeEngine(DL.ServeEngine):
     def compiled_programs(self) -> Dict[str, int]:
         return {"segment": self._segment._cache_size(),
                 "reset": self._reset._cache_size(),
-                "copy": self._copy._cache_size()}
+                "copy": self._copy._cache_size(),
+                "promote": self._promote._cache_size()}
 
     # -- slot lifecycle --------------------------------------------------
     def _begin(self, B: int, P: int, S: int):
@@ -590,11 +1002,15 @@ class PagedServeEngine(DL.ServeEngine):
             "prompt_tokens": 0, "prefilled_tokens": 0,
             "prefix_hit_tokens": 0, "cow_copies": 0, "deferrals": 0,
             "pages_peak": 0, "radix_pages": 0,
+            "spill_pages":
+                0 if self.kv.spill is None else self.kv.spill.n_spill,
+            "spill_promotes": 0, "spilled_pages": self.kv.spilled_pages,
         })
         return self._pool_cache
 
     def _admit(self, cache, s: int, idx: int, prompt, active: bool):
         st = self.last_stats
+        self._cur_cache = cache  # eviction may demote: read the live pool
         try:
             plan = self.kv.admit(s, list(prompt), self.max_new,
                                  label=f"request {idx}")
@@ -606,10 +1022,23 @@ class PagedServeEngine(DL.ServeEngine):
         ids = np.full(self.n_pages, self.n_pages + 1, np.int32)  # pad -> OOB
         ids[: len(plan.fresh_pages)] = plan.fresh_pages
         cache = self._reset(cache, s, jnp.asarray(ids))
+        for sid, dst, keep in plan.promote:
+            rows = {k: jnp.asarray(v)
+                    for k, v in self.kv.spill.read(sid).items()}
+            cache = self._promote(cache, jnp.int32(dst), rows,
+                                  jnp.int32(keep))
+            st["spill_promotes"] += 1
+        for sid in plan.free_spill:  # scatter dispatched: slot reusable
+            self.kv.spill.free(sid)
         for src, dst in plan.cow:
             cache = self._copy(cache, jnp.int32(src), jnp.int32(dst),
                                jnp.int32(plan.resume % self.page_size))
             st["cow_copies"] += 1
+        # crash consistency: the radix tree now points at the promoted /
+        # reset pages, so the pool holding them must survive even if this
+        # workload dies before _end (a dispatch failure must not strand
+        # the tree on data that only lived in the lost functional value)
+        self._pool_cache = self._cur_cache = cache
         self._table_dev = None  # table changed: re-ship at next dispatch
         st["resets"] += 1
         st["prompt_tokens"] += len(prompt)
@@ -625,6 +1054,10 @@ class PagedServeEngine(DL.ServeEngine):
         emits, valids, aux = self._segment(cache, mode, tok, pos, key, rem,
                                            pfill, pend, plen, self._table_dev)
         aux["cache"] = self._offload_pool(aux["cache"])
+        # keep the persistent pool pointing at the freshest value: pages
+        # published to the radix tree mid-workload must survive a failure
+        # on a LATER segment dispatch
+        self._pool_cache = self._cur_cache = aux["cache"]
         return emits, valids, aux
 
     def _post_dispatch(self, mode, pfill, plen, pend, owner) -> None:
@@ -641,5 +1074,7 @@ class PagedServeEngine(DL.ServeEngine):
     def _end(self, cache) -> None:
         # the pool (radix-shared prefixes included) persists across calls
         self._pool_cache = cache
+        self._cur_cache = cache
         if self.kv.radix is not None:
             self.last_stats["radix_pages"] = self.kv.radix.pages
+            self.last_stats["spilled_pages"] = self.kv.spilled_pages

@@ -14,7 +14,12 @@ kv-heads over ``model`` per ``cache_shardings``, segment jit carrying
     (page_size % 4 == 0), token parity;
   * ssm (falcon-mamba): recurrent per-slot state on the mesh, token
     parity (paged pool degrades to per-slot dense state there);
-  * dense (non-paged) ServeEngine on the mesh, token parity.
+  * dense (non-paged) ServeEngine on the mesh, token parity;
+  * llama ps=4 + host streaming: page_size does NOT divide the 8-device
+    mesh, so the pool-offload placement falls back to the kv-head dim;
+  * llama-spill: a tight pool demotes radix pages to the spill tier and
+    re-serves them through the sharded promote scatter, matching the
+    single-device oracle across the whole three-workload sequence.
 
 Every engine must still report exactly its bounded program set after a
 full workload.  Exits nonzero on any mismatch; prints the marker line on
@@ -84,13 +89,15 @@ def step_parity(cfg, params, par):
     np.testing.assert_allclose(lg21, lg20, rtol=1e-5, atol=1e-5)
 
 
-def engine_parity(arch, name, *, paged=True, n_host_chunks=0, **over):
+def engine_parity(arch, name, *, paged=True, n_host_chunks=0, page_size=8,
+                  n_pages=24, spill_pages=0, **over):
     cfg = make_cfg(arch, **over)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     par = serve_mesh(2, 4)
     kw = dict(slots=2, bucket=16, max_new_tokens=4, prefill_chunk=8,
               segment=2, n_host_chunks=n_host_chunks)
-    pkw = dict(kw, page_size=8, n_pages=24) if paged else kw
+    pkw = (dict(kw, page_size=page_size, n_pages=n_pages,
+                spill_pages=spill_pages) if paged else kw)
     Eng = PagedServeEngine if paged else DL.ServeEngine
     prompts = prompts_for(cfg)
 
@@ -108,10 +115,11 @@ def engine_parity(arch, name, *, paged=True, n_host_chunks=0, **over):
             want2 = e0.generate(prompts)
             assert got2 == want2, f"{name}: post-radix-hit tokens diverge"
         progs = e1.compiled_programs()
-        expect = {"segment", "reset", "copy"} if paged else {"segment",
-                                                             "reset"}
-        # bounded set: each program compiled AT MOST once (copy stays 0
-        # when no COW fired, e.g. radix-disabled recurrent layouts)
+        expect = ({"segment", "reset", "copy", "promote"} if paged
+                  else {"segment", "reset"})
+        # bounded set: each program compiled AT MOST once (copy/promote
+        # stay 0 when no COW / spill re-admit fired, e.g. radix-disabled
+        # recurrent layouts)
         assert set(progs) == expect and all(v <= 1 for v in progs.values()) \
             and progs["segment"] == 1 and progs["reset"] == 1, \
             f"{name}: program set grew: {progs}"
@@ -120,6 +128,40 @@ def engine_parity(arch, name, *, paged=True, n_host_chunks=0, **over):
         with par.mesh:
             step_parity(cfg, params, par)
     print(f"OK {name}")
+
+
+def spill_parity():
+    """Demote -> promote round-trip on the mesh: a tight pool forces LRU
+    radix pages into the spill tier, re-serving the original prompts
+    promotes them back through the sharded ``promote_page`` scatter, and
+    the whole three-workload sequence must match the single-device oracle
+    token for token."""
+    cfg = make_cfg("llama3.2-1b", num_heads=4, num_kv_heads=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    par = serve_mesh(2, 4)
+    pkw = dict(slots=2, bucket=16, max_new_tokens=4, prefill_chunk=8,
+               segment=2, page_size=8, n_pages=8, spill_pages=16)
+    prompts = prompts_for(cfg)
+    rng = np.random.default_rng(7)
+    evictors = [rng.integers(2, cfg.vocab_size - 1, 16).tolist()
+                for _ in range(3)]
+
+    def run(eng):
+        return (eng.generate(prompts), eng.generate(evictors),
+                eng.generate(prompts))
+
+    want = run(PagedServeEngine(cfg, params, **pkw))
+    with par.mesh:
+        e1 = PagedServeEngine(cfg, params, par=par, **pkw)
+        got = run(e1)
+        assert got == want, f"llama-spill: tokens diverge\n{got}\n{want}"
+        st = e1.last_stats
+        assert st["spill_promotes"] > 0, \
+            f"llama-spill: expected promote-from-spill re-admissions: {st}"
+        progs = e1.compiled_programs()
+        assert progs["promote"] == 1 and all(v <= 1 for v in progs.values()), \
+            f"llama-spill: program set grew: {progs}"
+    print("OK llama-spill")
 
 
 if __name__ == "__main__":
@@ -135,4 +177,11 @@ if __name__ == "__main__":
     # dense engine path (no pool) also carries mesh shardings
     engine_parity("llama3.2-1b", "llama-dense", paged=False, num_heads=4,
                   num_kv_heads=4)
+    # ps=4 does NOT divide the 8-device mesh while host-streaming: the
+    # pool-offload spec must fall back to the kv-head dim (hkv=8 % 8 == 0)
+    # instead of silently building a single-device sharding
+    engine_parity("llama3.2-1b", "llama-psindiv-stream", num_heads=8,
+                  num_kv_heads=8, page_size=4, n_pages=48, n_host_chunks=2)
+    # demote/promote round-trip + persistence program bound on the mesh
+    spill_parity()
     print("ALL SERVE MESH CHECKS PASSED")

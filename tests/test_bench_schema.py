@@ -42,3 +42,25 @@ def test_bench_schema(path):
             assert row["name"] not in seen, \
                 f"{suite}: duplicate row name {row['name']}"
             seen.add(row["name"])
+
+
+def test_bench_kv_store_acceptance():
+    """The persisted-prefix-cache claims: a restarted engine restored from
+    ``--kv-store`` must serve the shared-system-prompt workload >90%
+    prefix-hit with identical outputs, through the bounded program set."""
+    path = os.path.join(ROOT, "BENCH_kv_store.json")
+    assert os.path.exists(path), "BENCH_kv_store.json not committed"
+    with open(path) as f:
+        rows = {r["name"]: r["value"] for r in json.load(f)["kv_store"]}
+    assert rows["kv_store_saved_pages"] > 0
+    # restored <= saved: paths the restarted engine already holds live
+    # (its own warmup) win over the file and are skipped
+    assert 0 < rows["kv_store_restored_pages"] <= rows["kv_store_saved_pages"]
+    assert rows["kv_store_restored_hit_rate"] > 0.9, \
+        "restored engine must radix-hit the persisted shared prefix"
+    assert rows["kv_store_restored_hit_rate"] > rows["kv_store_cold_hit_rate"]
+    assert rows["kv_store_restored_promotes"] > 0  # pages came off the tier
+    assert rows["kv_store_outputs_match"] == 1
+    assert rows["kv_store_programs_promote"] == 1
+    for prog in ("segment", "reset", "copy", "promote"):
+        assert rows[f"kv_store_programs_{prog}"] <= 1, prog

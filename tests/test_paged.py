@@ -412,6 +412,257 @@ def test_pool_pressure_defers_not_fails():
 
 
 # ---------------------------------------------------------------------------
+# spill tier + persistence
+# ---------------------------------------------------------------------------
+
+
+def _rescan_evict_order(nodes, n_pages):
+    """Reference model of the RETIRED O(pages^2) eviction: re-collect every
+    evictable leaf per freed page, take the min stamp.  ``nodes`` is a
+    plain mirror [{page, last_used, parent_idx, alive}]; returns the page
+    ids in eviction order (no spill tier: every victim is dropped)."""
+    order = []
+    while len(order) < n_pages:
+        children = {}
+        for i, nd in enumerate(nodes):
+            if nd["alive"] and nd["parent"] >= 0:
+                children.setdefault(nd["parent"], []).append(i)
+        cand = [i for i, nd in enumerate(nodes)
+                if nd["alive"] and not any(nodes[c]["alive"]
+                                           for c in children.get(i, []))]
+        if not cand:
+            break
+        victim = min(cand, key=lambda i: nodes[i]["last_used"])
+        nodes[victim]["alive"] = False
+        order.append(nodes[victim]["page"])
+    return order
+
+
+@settings(max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_evict=st.integers(min_value=1, max_value=12))
+def test_evict_single_pass_matches_rescan_order(seed, n_evict):
+    """Property: the single-pass heap eviction frees exactly the pages the
+    retired rescan-per-page algorithm would, in the same order."""
+    rng = np.random.default_rng(seed)
+    pool = PG.PagePool(24)
+    tree = PG.RadixTree(1, pool)
+    # random forest: chains off random prefixes, then randomized LRU stamps
+    seqs = [rng.integers(0, 4, size=rng.integers(1, 5)).tolist()
+            for _ in range(rng.integers(2, 7))]
+    for s in seqs:
+        have = len(tree.match(s))
+        pids = [pool.alloc() for _ in range(len(s) - have)]
+        tree.insert(s, tree.match(s)[:have] + pids)
+        for p in pids:
+            pool.release(p)
+    for s in rng.permutation(len(seqs)):
+        tree.match(seqs[s])  # scramble recency
+    # mirror the live tree into the plain reference structure
+    mirror, idx_of = [], {}
+    stack = [(tree.root, -1)]
+    while stack:
+        nd, pidx = stack.pop()
+        if nd is not tree.root:
+            idx_of[id(nd)] = len(mirror)
+            mirror.append({"page": nd.page, "last_used": nd.last_used,
+                           "parent": pidx, "alive": True})
+        me = idx_of.get(id(nd), -1)
+        stack.extend((c, me) for c in nd.children.values())
+    want = _rescan_evict_order(mirror, n_evict)
+    got = []
+    orig = pool.release
+    pool.release = lambda pid: (got.append(pid), orig(pid))[1]
+    try:
+        freed = tree.evict(n_evict)
+    finally:
+        pool.release = orig
+    assert got == want and freed == len(want)
+
+
+def test_spill_pool_and_radix_demotion():
+    """Radix-level tier mechanics: eviction demotes payloads host-side
+    through read_page, spilled nodes match (as -1) without dying, insert
+    re-points a spilled twin at a fresh device page, and a full tier
+    degrades to dropping leaves — never a node with spilled children."""
+    pool = PG.PagePool(8)
+    spill = PG.SpillPool(2)
+    tree = PG.RadixTree(2, pool, spill=spill)
+    reads = []
+    tree.read_page = lambda pid: (reads.append(pid),
+                                  {"pk": np.full(3, pid, np.float32)})[1]
+    chains = {"a": [1, 2, 3, 4], "b": [5, 6], "c": [7, 8]}
+    pids = {}
+    for k, toks in chains.items():
+        ps_ = [pool.alloc() for _ in range(len(toks) // 2)]
+        tree.insert(toks, ps_)
+        pids[k] = ps_
+        for p in ps_:
+            pool.release(p)
+    tree.match(chains["a"])  # a is freshest; b, c are LRU
+    assert tree.evict(2) == 2  # demotes b's and c's leaves
+    assert sorted(reads) == sorted([pids["b"][0], pids["c"][0]])
+    assert tree.spilled == 2 and tree.pages == 2
+    assert tree.match(chains["b"]) == [-1]  # spilled, still matchable
+    assert np.all(spill.read(tree.match_nodes(chains["b"])[0].spill)["pk"]
+                  == pids["b"][0])
+    # tier is full: next eviction DROPS the leaf, keeps spilled-child parents
+    assert tree.evict(2) == 2  # a's chain: leaf dropped, then its parent
+    assert tree.pages == 0 and tree.match(chains["a"]) == []
+    # re-prefill of b: the spilled twin is re-pointed, host copy freed
+    fresh = pool.alloc()
+    assert tree.insert(chains["b"], [fresh]) == 1
+    assert tree.match(chains["b"]) == [fresh] and tree.spilled == 1
+    pool.release(fresh)
+    # misuse raises
+    with pytest.raises(ValueError, match="n_spill"):
+        PG.SpillPool(0)
+    sid = spill.alloc()
+    spill.free(sid)
+    with pytest.raises(ValueError, match="unallocated"):
+        spill.free(sid)
+
+
+def test_spill_demote_promote_engine_parity():
+    """End-to-end tier round-trip: a tight pool demotes the radix pages of
+    workload A while B runs, re-serving A promotes them back — outputs
+    stay identical to the dense engine across all three workloads, and the
+    compiled set stays {segment, reset, copy, promote}, each <= 1."""
+    cfg, params = setup("llama3.2-1b")
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, size=16).tolist()
+    wl_a = [shared + rng.integers(0, cfg.vocab_size, size=k).tolist()
+            for k in (3, 5)]
+    wl_b = [rng.integers(0, cfg.vocab_size, size=20).tolist()
+            for _ in range(3)]
+    kw = dict(slots=2, bucket=24, max_new_tokens=4, segment=2,
+              prefill_chunk=4)
+    dense = DL.ServeEngine(cfg, params, **kw)
+    ref = [dense.generate(w) for w in (wl_a, wl_b, wl_a)]
+    eng = PG.PagedServeEngine(cfg, params, page_size=4, n_pages=16,
+                              spill_pages=32, **kw)
+    got = [eng.generate(w) for w in (wl_a, wl_b, wl_a)]
+    assert got == ref
+    st = eng.last_stats
+    assert st["spill_promotes"] > 0, st  # pages came back from the tier
+    assert st["prefix_hit_tokens"] >= 16, st
+    progs = eng.compiled_programs()
+    assert set(progs) == {"segment", "reset", "copy", "promote"}
+    assert all(v <= 1 for v in progs.values()), progs
+    assert progs["promote"] == 1, progs
+
+
+def test_kv_store_save_restore_roundtrip(tmp_path):
+    """Persistence: a fresh engine restored from ``save_kv_store`` serves
+    the saved prefixes as radix hits (promoted from the spill tier) with
+    outputs identical to the engine that built the cache, and restore
+    validates page_size / spill-tier preconditions."""
+    cfg, params = setup("llama3.2-1b")
+    rng = np.random.default_rng(13)
+    shared = rng.integers(0, cfg.vocab_size, size=16).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab_size, size=k).tolist()
+               for k in (3, 6)]
+    kw = dict(slots=2, bucket=24, max_new_tokens=4, segment=2,
+              prefill_chunk=4, page_size=4, n_pages=16)
+    eng = PG.PagedServeEngine(cfg, params, spill_pages=8, **kw)
+    want = eng.generate(prompts)
+    store = str(tmp_path / "kv.npz")
+    saved = eng.save_kv_store(store)
+    assert saved == eng.kv.radix.pages + eng.kv.spilled_pages > 0
+    eng2 = PG.PagedServeEngine(cfg, params, spill_pages=32, **kw)
+    assert eng2.restore_kv_store(store) == saved
+    assert eng2.kv.spilled_pages == saved  # restored pages start host-side
+    got = eng2.generate(prompts)
+    assert got == want
+    st = eng2.last_stats
+    assert st["prefix_hit_tokens"] >= 16, st  # the shared prefix radix-hit
+    assert st["spill_promotes"] > 0, st
+    assert eng2.compiled_programs()["promote"] == 1
+    # validation: a mismatched pool geometry must refuse loudly
+    with pytest.raises(ValueError, match="page_size"):
+        PG.PagedServeEngine(cfg, params, spill_pages=8,
+                            **dict(kw, page_size=8,
+                                   prefill_chunk=8)).restore_kv_store(store)
+    with pytest.raises(ValueError, match="spill"):
+        PG.PagedServeEngine(cfg, params, **kw).restore_kv_store(store)
+    # save with live device pages needs the engine's page reader: the raw
+    # manager without one refuses rather than writing garbage
+    bare = PG.PagedCacheManager(8, 4)
+    bare.begin(1, 4)
+    bare.admit(0, list(range(8)), 0)
+    bare.complete_prefill(0, list(range(8)))
+    with pytest.raises(ValueError, match="read_page"):
+        bare.save(str(tmp_path / "bare.npz"))
+    # extension dtypes (bfloat16 pools) survive the npz round-trip: npz
+    # would otherwise store them as opaque void and restore would crash
+    import ml_dtypes
+    pool = PG.PagePool(4)
+    tree = PG.RadixTree(2, pool, spill=PG.SpillPool(4))
+    pid = pool.alloc()
+    tree.insert([9, 9], [pid])
+    pool.release(pid)
+    payload = {"pk": np.arange(6, dtype=ml_dtypes.bfloat16).reshape(2, 3)}
+    bf_store = str(tmp_path / "bf16.npz")
+    tree.save(bf_store, lambda _pid: payload)
+    tree2 = PG.RadixTree(2, PG.PagePool(4), spill=PG.SpillPool(4))
+    assert tree2.restore(bf_store) == 1
+    got = tree2.spill.read(tree2.match_nodes([9, 9])[0].spill)
+    assert got["pk"].dtype == payload["pk"].dtype
+    assert np.array_equal(got["pk"], payload["pk"])
+
+
+def test_dispatch_failure_releases_slots_spill_survives(monkeypatch):
+    """Satellite: a dispatch exception mid-generate leaves slots admitted;
+    the next workload's begin() releases their pages while radix-indexed
+    AND spilled pages survive — the engine un-wedges without losing the
+    prefix cache."""
+    cfg, params = setup("llama3.2-1b")
+    rng = np.random.default_rng(17)
+    shared = rng.integers(0, cfg.vocab_size, size=16).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab_size, size=k).tolist()
+               for k in (3, 5)]
+    evictors = [rng.integers(0, cfg.vocab_size, size=20).tolist()
+                for _ in range(3)]
+    kw = dict(slots=2, bucket=24, max_new_tokens=4, segment=2,
+              prefill_chunk=4)
+    ref_eng = DL.ServeEngine(cfg, params, **kw)
+    ref = [ref_eng.generate(w) for w in (prompts, evictors, prompts)]
+    eng = PG.PagedServeEngine(cfg, params, page_size=4, n_pages=16,
+                              spill_pages=32, **kw)
+    assert eng.generate(prompts) == ref[0]
+    assert eng.generate(evictors) == ref[1]  # pressure demotes A's prefix
+    spilled = eng.kv.spilled_pages
+    radix = eng.kv.radix.pages
+    assert spilled > 0
+    orig = PG.PagedServeEngine._dispatch
+
+    def boom(self, *a, **k):
+        raise RuntimeError("injected dispatch failure")
+
+    monkeypatch.setattr(PG.PagedServeEngine, "_dispatch", boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.generate(prompts)
+    # slots stayed admitted (the failure skipped release)
+    assert any(eng.kv._slot_pages), "failure should leave admitted slots"
+    monkeypatch.setattr(PG.PagedServeEngine, "_dispatch", orig)
+    out = eng.generate(prompts)  # begin() releases the wedged slots
+    assert out == ref[2]
+    st = eng.last_stats
+    assert st["prefix_hit_tokens"] >= 16, st  # prefix cache survived
+    assert radix + spilled >= 1  # sanity on the pre-failure snapshot
+    # no tier-slot leak: every used spill slot is owned by exactly one
+    # live tree node (the failed workload's promotes freed their slots)
+    owners = []
+    stack = [eng.kv.radix.root]
+    while stack:
+        nd = stack.pop()
+        owners.extend(c.spill for c in nd.children.values() if c.spill >= 0)
+        stack.extend(nd.children.values())
+    assert sorted(owners) == sorted(set(owners))
+    assert len(owners) == eng.kv.spilled_pages
+
+
+# ---------------------------------------------------------------------------
 # program-size / acceptance (slow)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,31 @@
+"""Placement audit: every ``memory_kind=`` decision lives in placement.py.
+
+The placement module's contract (its own docstring) is that all
+``jax.device_put`` memory-kind choices route through ``PlacementPolicy`` —
+that is what lets the repo degrade gracefully on backends without a
+distinct pinned-host pool and keeps the offload story auditable.  A raw
+``memory_kind=`` anywhere else (serve engine, paged pool, launch scripts)
+would silently bypass the capability probe and crash on CPU/older TPUs.
+This test turns the contract's ``grep`` into tier-1.
+"""
+import os
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_memory_kind_only_in_placement():
+    offenders = []
+    for root, _dirs, files in os.walk(SRC):
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(root, fn)
+            if os.path.basename(path) == "placement.py":
+                continue
+            with open(path, encoding="utf-8") as f:
+                for i, line in enumerate(f, 1):
+                    if "memory_kind=" in line:
+                        offenders.append(f"{os.path.relpath(path, SRC)}:{i}")
+    assert not offenders, (
+        "memory_kind= outside runtime/placement.py — route these through "
+        f"PlacementPolicy instead: {offenders}")

@@ -32,7 +32,7 @@ def test_serve_mesh_parity():
                              f"STDERR:\n{r.stderr[-4000:]}")
     assert "ALL SERVE MESH CHECKS PASSED" in r.stdout
     for cell in ("llama-headshard", "llama-psfallback", "ssm-paged",
-                 "llama-dense"):
+                 "llama-dense", "llama-psindiv-stream", "llama-spill"):
         assert f"OK {cell}" in r.stdout, r.stdout
 
 
@@ -105,6 +105,21 @@ def test_router_replica_failure_is_named():
     with pytest.raises(ReplicaFailed, match="replica 1"):
         rt.generate([[1], [2]])
     assert rt.depth == [0, 0]  # failure still drains accounting
+
+
+def test_router_failure_drains_undispatched_tail():
+    """Regression: when an EARLY replica fails, requests already assigned
+    to replicas after it never reached their own dispatch-side decrement —
+    the leaked depth permanently skewed every future spill decision."""
+    reps = [FakeReplica(fail=True), FakeReplica(), FakeReplica()]
+    rt = ReplicaRouter(reps, policy="rr")
+    with pytest.raises(ReplicaFailed, match="replica 0"):
+        rt.generate([[1], [2], [3], [4], [5], [6]])
+    assert rt.depth == [0, 0, 0]  # the undispatched tail drained too
+    # a healthy rerun routed through the same accounting still balances
+    reps[0].fail = False
+    rt.generate([[1], [2], [3]])
+    assert rt.depth == [0, 0, 0]
 
 
 def test_router_rejects_bad_config():
