@@ -66,6 +66,7 @@ def main() -> None:
         "paged": serve_bench.run_paged,
         "serve_mesh": serve_bench.run_serve_mesh,
         "kv_store": serve_bench.run_kv_store,
+        "slo": serve_bench.run_slo,
     }
     sel = args.only or list(suites)
     failures = 0

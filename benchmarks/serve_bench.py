@@ -432,6 +432,238 @@ def run_kv_store() -> List[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# SLO scheduling: heavy-tailed traffic simulator + goodput-under-SLO
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficTier:
+    """One QoS class of the simulated tenant mix.  Lengths are the UNIQUE
+    tail appended to a shared prefix; SLOs are in dispatch steps (the
+    deterministic clock of ``SLOPagedServeEngine``), ``inf`` = no bound."""
+    name: str
+    priority: int
+    share: float
+    tail_lo: int
+    tail_hi: int
+    ttft_slo: float
+    itl_slo: float
+    prefill_chunks: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SimRequest:
+    """One simulated request: a concrete token stream plus its arrival
+    step and the QoS contract inherited from its tier."""
+    idx: int
+    arrival: int
+    tokens: tuple
+    prefix_id: int
+    tier: str
+    priority: int
+    ttft_slo: float
+    itl_slo: float
+    prefill_chunks: int
+
+
+DEFAULT_TIERS = (
+    TrafficTier("interactive", 0, 0.7, 4, 24, 10.0, 8.0),
+    TrafficTier("batch", 1, 0.3, 64, 160, float("inf"), float("inf"), 2),
+)
+
+
+def traffic_trace(*, seed: int = 0, n_requests: int = 24, vocab: int = 256,
+                  n_prefixes: int = 4, zipf_a: float = 1.1,
+                  prefix_len: int = 8, rate: float = 0.2,
+                  burst_p: float = 0.25, burst_k: int = 3,
+                  tail_alpha: float = 2.0, tiers=DEFAULT_TIERS):
+    """Deterministic heavy-tailed multi-tenant trace.
+
+    * **Zipf prompt sharing** — each request opens with one of
+      ``n_prefixes`` shared prefixes drawn with weight ``1/rank^zipf_a``
+      (the radix tree's reason to exist: a few system prompts dominate);
+    * **Poisson + burst arrivals** — exponential inter-arrival gaps at
+      ``rate`` requests/step, and with probability ``burst_p`` a gap
+      delivers a burst of ``burst_k`` simultaneous requests;
+    * **heavy-tailed lengths** — the unique tail is
+      ``tail_lo + Pareto(tail_alpha)``-scaled, clipped to the tier's
+      ``tail_hi`` (mixed short interactive / long batch contexts);
+    * **tiers** — requests are assigned to ``tiers`` by share, inheriting
+      priority, TTFT/ITL SLOs (in dispatch steps), and prefill budgets.
+
+    Everything flows from one ``numpy.random.default_rng(seed)`` (PCG64 —
+    stable across platforms and processes), so the same seed yields a
+    byte-identical trace anywhere: FIFO-vs-SLO comparisons replay the
+    exact same offered load.  Arrivals are non-decreasing integers.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, size=prefix_len).tolist()
+                for _ in range(n_prefixes)]
+    w = np.array([1.0 / (k + 1) ** zipf_a for k in range(n_prefixes)])
+    w /= w.sum()
+    shares = np.array([t.share for t in tiers], float)
+    shares /= shares.sum()
+    reqs, t, i = [], 0.0, 0
+    while i < n_requests:
+        t += rng.exponential(1.0 / rate)
+        k = burst_k if rng.random() < burst_p else 1
+        for _ in range(min(k, n_requests - i)):
+            tier = tiers[int(rng.choice(len(tiers), p=shares))]
+            pid = int(rng.choice(n_prefixes, p=w))
+            span = max(tier.tail_hi - tier.tail_lo, 1)
+            tail_len = tier.tail_lo + min(
+                int(rng.pareto(tail_alpha) * 0.25 * span), span)
+            tail = rng.integers(0, vocab, size=tail_len).tolist()
+            reqs.append(SimRequest(
+                idx=i, arrival=int(t), tokens=tuple(prefixes[pid] + tail),
+                prefix_id=pid, tier=tier.name, priority=tier.priority,
+                ttft_slo=tier.ttft_slo, itl_slo=tier.itl_slo,
+                prefill_chunks=tier.prefill_chunks))
+            i += 1
+    return reqs
+
+
+def _slo_eval(trace, stats, outs, wall_s: float) -> dict:
+    """Goodput-under-SLO from the engine's step-indexed per-request stats:
+    a request is GOOD iff it emitted, its TTFT (first-emit step − arrival
+    step) met the tier's TTFT SLO, and its worst inter-token gap met the
+    ITL SLO.  Goodput = good tokens / total dispatch steps — deterministic
+    given the trace (wall-clock figures ride along as informational)."""
+    import numpy as np
+
+    steps = max(stats["dispatches"], 1)
+    good = good_tokens = 0
+    ttft_by_tier: dict = {}
+    for r, rs in zip(trace, stats["requests"]):
+        ttft = (rs["first_emit"] - r.arrival
+                if rs["first_emit"] is not None else float("inf"))
+        ttft_by_tier.setdefault(r.tier, []).append(ttft)
+        if (rs["n_emitted"] > 0 and ttft <= r.ttft_slo
+                and rs["max_gap"] <= r.itl_slo):
+            good += 1
+            good_tokens += rs["n_emitted"]
+    total_tokens = sum(len(o) for o in outs)
+    return {
+        "goodput": round(good_tokens / steps, 4),
+        "good_requests": good, "good_tokens": good_tokens,
+        "total_tokens": total_tokens, "steps": stats["dispatches"],
+        "preemptions": stats["preemptions"],
+        "prefill_pauses": stats["prefill_pauses"],
+        "deferrals": stats["deferrals"],
+        "tok_per_s": round(total_tokens / max(wall_s, 1e-9), 1),
+        "p95_ttft": {tier: round(float(np.percentile(v, 95)), 1)
+                     if np.isfinite(v).all() else float("inf")
+                     for tier, v in ttft_by_tier.items()},
+    }
+
+
+def slo_workload(*, seed: int = 0, n_requests: int = 24, slots: int = 2,
+                 gen: int = 12, cp: int = 8, page_size: int = 4,
+                 spill_pages: int = 32, prefill_budget: int = 2,
+                 trace_kw: dict = None) -> dict:
+    """The SLO acceptance workload: replay ONE seeded heavy-tailed trace
+    through ``SLOPagedServeEngine`` under both admission policies (fresh
+    engine + fresh radix per policy, identical warm-up) and compare
+    goodput-under-SLO.  FIFO serves in arrival order with no preemption —
+    a burst of tight-TTFT interactive requests queues behind long batch
+    contexts; the SLO policy queue-jumps them and preempts batch slots
+    through the radix/spill publish-release path.  Outputs must match
+    byte-for-byte across policies (greedy sampling: preemption is
+    lossless)."""
+    import numpy as np
+
+    import jax
+
+    from repro.runtime import decode_loop as DL
+    from repro.runtime import paged as PG
+
+    cfg, params, _, _ = _setup()
+    trace = traffic_trace(seed=seed, n_requests=n_requests,
+                          vocab=cfg.vocab_size, **(trace_kw or {}))
+    dl_reqs = [DL.Request(tokens=r.tokens, priority=r.priority,
+                          arrival=r.arrival, itl_slo=r.itl_slo,
+                          prefill_chunks=r.prefill_chunks, tier=r.tier)
+               for r in trace]
+    longest = max(len(r.tokens) for r in trace)
+    kw = dict(slots=slots, bucket=longest + gen, max_new_tokens=gen,
+              segment=1, prefill_chunk=cp, page_size=page_size,
+              spill_pages=spill_pages, prefill_budget=prefill_budget)
+    out = {"seed": seed, "n_requests": n_requests, "slots": slots,
+           "gen": gen, "prefill_chunk": cp, "page_size": page_size,
+           "longest_prompt": longest,
+           "tiers": {t.name: dataclasses.asdict(t) for t in DEFAULT_TIERS}}
+    outs_by_policy = {}
+    for policy in ("fifo", "slo"):
+        eng = PG.SLOPagedServeEngine(cfg, params, policy=policy, **kw)
+        # absorb every compile on DISJOINT warm-up tokens (identical
+        # per-policy): a preempting pair exercises segment, reset and the
+        # full-cover COW copy; force-demoting the warm pages to the spill
+        # tier and re-serving them compiles the promote scatter.  After
+        # this the measured run compiles NOTHING, and the radix state the
+        # trace sees is untouched by warm-up prefixes (disjoint tokens —
+        # the measured hit stats stay first-serve)
+        wrng = np.random.default_rng(seed + 99)
+        wp = wrng.integers(0, cfg.vocab_size, size=3 * page_size).tolist()
+        warm = [DL.Request(tokens=tuple(wp), priority=1, arrival=0),
+                DL.Request(tokens=tuple(wp), priority=0, arrival=2)]
+        eng.generate(warm, key=jax.random.PRNGKey(seed))
+        if eng.kv.radix is not None and eng.kv.spill is not None:
+            eng.kv.radix.evict(len(wp) // page_size)
+        eng.generate(warm, key=jax.random.PRNGKey(seed))
+        programs_before = dict(eng.compiled_programs())
+        t0 = time.perf_counter()
+        outs = eng.generate(dl_reqs, key=jax.random.PRNGKey(seed))
+        wall = time.perf_counter() - t0
+        outs_by_policy[policy] = outs
+        out[policy] = _slo_eval(trace, eng.last_stats, outs, wall)
+        out[policy]["programs_before"] = programs_before
+        out[policy]["programs"] = dict(eng.compiled_programs())
+    out["outputs_match"] = outs_by_policy["fifo"] == outs_by_policy["slo"]
+    out["programs"] = out["slo"]["programs"]
+    return out
+
+
+def run_slo() -> List[str]:
+    """benchmarks.run entry for the ``slo`` suite: FIFO vs SLO-aware
+    scheduling on the same seeded heavy-tailed trace.  The acceptance
+    claims (checked against the committed ``BENCH_slo.json`` by
+    ``tests/test_bench_schema.py``): SLO-aware goodput >= FIFO goodput,
+    preemptions actually happened, outputs identical across policies, and
+    the compiled-program set still bounded at one each of
+    {segment, reset, copy, promote}."""
+    r = slo_workload()
+    for p in ("fifo", "slo"):
+        m = r[p]
+        print(f"{p:>5s}: goodput={m['goodput']} tok/step "
+              f"({m['good_requests']}/{r['n_requests']} good, "
+              f"{m['good_tokens']}/{m['total_tokens']} tokens, "
+              f"{m['steps']} steps)  preempts={m['preemptions']} "
+              f"pauses={m['prefill_pauses']} defers={m['deferrals']} "
+              f"p95_ttft={m['p95_ttft']}")
+    print(f"outputs_match={r['outputs_match']} programs={r['programs']}")
+    rows = ["bench,name,value,derived"]
+    for p in ("fifo", "slo"):
+        m = r[p]
+        rows.append(f"bench,slo_goodput_{p},{m['goodput']},tok/step")
+        rows.append(f"bench,slo_good_requests_{p},{m['good_requests']},count")
+        rows.append(f"bench,slo_good_tokens_{p},{m['good_tokens']},count")
+        rows.append(f"bench,slo_steps_{p},{m['steps']},count")
+        rows.append(f"bench,slo_preemptions_{p},{m['preemptions']},count")
+        rows.append(f"bench,slo_prefill_pauses_{p},{m['prefill_pauses']},count")
+        rows.append(f"bench,slo_tok_per_s_{p},{m['tok_per_s']},tok/s")
+        ttft = m["p95_ttft"].get("interactive", float("inf"))
+        if ttft != float("inf"):
+            rows.append(f"bench,slo_interactive_p95_ttft_{p},{ttft},steps")
+    rows.append(f"bench,slo_requests,{r['n_requests']},count")
+    rows.append(f"bench,slo_outputs_match,{int(r['outputs_match'])},bool")
+    for k, v in r["programs"].items():
+        rows.append(f"bench,slo_programs_{k},{v},count")
+    return rows
+
+
 def measure_mesh_segment(data: int, model: int, num_steps: int = 4,
                          page_size: int = 8, devices=None) -> dict:
     """Program size / wall-clock of the SHARDED paged mixed-step segment on

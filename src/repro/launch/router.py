@@ -22,6 +22,13 @@ Replicas are anything with ``generate(prompts) -> List[List[int]]``
 that raises is reported as :class:`ReplicaFailed` *naming the replica* —
 a routing tier must say which backend died, not hang or blur the
 traceback into the caller's.
+
+Requests may be raw token sequences OR QoS-carrying
+``runtime.decode_loop.Request`` objects (duck-typed on ``.tokens`` — the
+router stays framework-free): routing hashes the token stream, and the
+object itself passes through to the replica untouched, so priorities,
+arrivals and deadlines survive the routing tier and land in a replica's
+``SLOPagedServeEngine`` intact.
 """
 from __future__ import annotations
 
@@ -30,6 +37,12 @@ import zlib
 from typing import Any, Dict, List, Optional, Sequence
 
 __all__ = ["ReplicaFailed", "ReplicaRouter"]
+
+
+def _tokens(prompt: Any) -> Sequence[int]:
+    """The token stream of a request: ``Request``-likes carry it in
+    ``.tokens``; anything else IS the stream."""
+    return prompt.tokens if hasattr(prompt, "tokens") else prompt
 
 
 class ReplicaFailed(RuntimeError):
@@ -74,7 +87,7 @@ class ReplicaRouter:
         if session is not None:
             key = session.encode()
         else:
-            head = list(prompt)[: self.prefix_tokens]
+            head = list(_tokens(prompt))[: self.prefix_tokens]
             key = b",".join(str(int(t)).encode() for t in head)
         return zlib.crc32(key) % len(self.replicas)
 

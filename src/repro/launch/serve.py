@@ -26,6 +26,12 @@ adds the host-resident spill tier (evicted radix pages demote instead of
 dropping) and ``--kv-store PATH`` persists the prefix cache across runs:
 restored at startup when the file exists, saved after the workload — a
 restarted server re-serves a shared system prompt as radix hits.
+``--sched slo`` (with ``--paged``) swaps in the SLO-aware scheduler
+(``runtime/paged.py::SLOPagedServeEngine``): short prompts become the
+priority-0 interactive tier, long ones best-effort batch; low-priority
+slots are preempted via the radix/spill publish-release path and
+``--prefill-budget N`` caps prefill chunks per burst.  ``--sched fifo``
+runs the same engine in arrival-order mode for A/B.
 
 ``--mesh AxB`` shards each engine over an (A data, B model) device mesh
 (paged pool kv-heads over ``model`` per ``models/serve.py``), ``--replicas
@@ -87,18 +93,34 @@ def _engine_main(args):
               sampling=DL.SamplingConfig(temperature=args.temperature,
                                          top_k=args.top_k), par=par)
     if args.paged:
-        from repro.runtime.paged import PagedServeEngine
+        from repro.runtime.paged import PagedServeEngine, SLOPagedServeEngine
 
         spill = args.spill_pages
         if args.kv_store and not spill:
             spill = 4 * args.n_pages if args.n_pages else 64  # restore target
-        engine = PagedServeEngine(cfg, params, prefill_chunk=args.prefill_chunk,
-                                  page_size=args.page_size,
-                                  n_pages=args.n_pages,
-                                  spill_pages=spill, **kw)
-        name = (f"paged pool (page_size={engine.page_size}, "
-                f"n_pages={engine.n_pages}, prefill_chunk={engine.cp}"
-                + (f", spill_pages={spill}" if spill else "") + ")")
+        pkw = dict(prefill_chunk=args.prefill_chunk, page_size=args.page_size,
+                   n_pages=args.n_pages, spill_pages=spill, **kw)
+        if args.sched:
+            engine = SLOPagedServeEngine(cfg, params, policy=args.sched,
+                                         prefill_budget=args.prefill_budget,
+                                         **pkw)
+            name = (f"SLO scheduler (policy={args.sched}, page_size="
+                    f"{engine.page_size}, prefill_budget="
+                    f"{args.prefill_budget})")
+            # QoS assignment: short prompts are the latency-sensitive tier
+            # (priority 0, staggered arrivals); long ones ride best-effort
+            med = int(np.median(lens))
+            prompts = [DL.Request(
+                tokens=tuple(p), arrival=i,
+                priority=0 if lens[i] <= med else 1,
+                itl_slo=8.0 if lens[i] <= med else float("inf"),
+                tier="interactive" if lens[i] <= med else "batch")
+                for i, p in enumerate(prompts)]
+        else:
+            engine = PagedServeEngine(cfg, params, **pkw)
+            name = (f"paged pool (page_size={engine.page_size}, "
+                    f"n_pages={engine.n_pages}, prefill_chunk={engine.cp}"
+                    + (f", spill_pages={spill}" if spill else "") + ")")
         if args.kv_store:
             import os
 
@@ -141,6 +163,12 @@ def _engine_main(args):
             print(f"  spill tier: {st['spilled_pages']}/{st['spill_pages']} "
                   f"host pages held, {st['spill_promotes']} promoted back "
                   f"on-device this run")
+        if args.sched:
+            pre = [r for r in st["requests"] if r["preemptions"]]
+            print(f"  scheduler [{st['policy']}]: {st['preemptions']} "
+                  f"preemptions ({len(pre)} requests), "
+                  f"{st['prefill_pauses']} prefill pauses, "
+                  f"{st['deferrals']} deferrals")
         if args.kv_store:
             n = engine.save_kv_store(args.kv_store)
             print(f"[kv-store] saved {n} prefix pages to {args.kv_store}")
@@ -240,6 +268,15 @@ def main():
                     help="with --paged: persist the prefix cache at this "
                          "path — restored at startup when the file exists, "
                          "saved after the run (implies a spill tier)")
+    ap.add_argument("--sched", default="", choices=["", "fifo", "slo"],
+                    help="with --paged: SLO-aware admission "
+                         "(SLOPagedServeEngine) — 'slo' preempts "
+                         "lower-priority slots via page spill/publish, "
+                         "'fifo' is the arrival-order baseline")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="with --sched slo: prefill chunks a request may "
+                         "burn before pausing while co-resident slots "
+                         "decode (0 = unbounded)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="with --engine: prepend a common system prompt of "
                          "this many tokens to every request (radix hits)")
@@ -256,6 +293,11 @@ def main():
     args = ap.parse_args()
     if args.mesh and not args.engine:
         ap.error("--mesh requires --engine")
+    if args.sched and not args.paged:
+        ap.error("--sched requires --paged (preemption spills KV pages)")
+    if args.sched and args.mesh:
+        ap.error("--sched is single-engine for now; route QoS requests to "
+                 "sharded replicas via launch/router.py instead")
     if args.mesh:
         try:
             data, model = (int(x) for x in args.mesh.split("x"))

@@ -26,9 +26,11 @@ Measured by ``benchmarks/serve_bench.py``; architecture notes in
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +71,57 @@ def sample_token(logits: jnp.ndarray, key, sc: SamplingConfig = GREEDY) -> jnp.n
         kth = jax.lax.top_k(logits, sc.top_k)[0][:, -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits / sc.temperature, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# requests (QoS contract for the SLO-aware scheduler)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One queued generation request plus its QoS contract.
+
+    Plain prompts (token sequences) coerce to default requests via
+    :func:`as_request`, so every engine ``generate`` keeps accepting raw
+    token lists.  The extra fields only matter to the SLO-aware scheduler
+    (``runtime/paged.py::SLOPagedServeEngine``); the FIFO engines ignore
+    them:
+
+      priority       — admission class, LOWER value = more urgent (0 =
+                       interactive tier).  The SLO scheduler admits
+                       strictly by (priority, itl_slo) and may preempt a
+                       decoding request to seat a strictly more urgent
+                       one;
+      arrival        — the dispatch step at which the request becomes
+                       visible to the scheduler (the traffic simulator's
+                       deterministic clock; 0 = already queued);
+      itl_slo        — inter-token-latency deadline in dispatch steps
+                       (the tie-break within a priority class: tightest
+                       deadline first, EDF-style).  ``inf`` = no deadline;
+      prefill_chunks — per-request prefill budget: at most this many
+                       prefill chunks per burst before the scheduler
+                       pauses the prefill for one segment so co-resident
+                       decodes get a chunk-free (fast-path) step
+                       (0 = engine default / unlimited);
+      tier           — free-form label carried into per-request stats
+                       (the benchmark's goodput-under-SLO accounting).
+    """
+
+    tokens: Tuple[int, ...]
+    priority: int = 1
+    arrival: int = 0
+    itl_slo: float = math.inf
+    prefill_chunks: int = 0
+    tier: str = ""
+
+
+def as_request(r: Union[Request, Sequence[int]]) -> Request:
+    """Coerce a raw prompt (token sequence) into a default :class:`Request`;
+    pass real requests through untouched."""
+    if isinstance(r, Request):
+        return r
+    return Request(tokens=tuple(int(t) for t in r))
 
 
 # ---------------------------------------------------------------------------
@@ -450,7 +503,8 @@ class ServeEngine:
             cache = jax.device_put(cache, self._cache_sh)
         return cache
 
-    def _admit(self, cache, s: int, idx: int, prompt, active: bool):
+    def _admit(self, cache, s: int, idx: int, prompt, active: bool,
+               budget: Optional[int] = None):
         """Claim slot ``s`` for request ``idx``: invalidate the slot's rows
         and return ``(cache, resume)`` where ``resume`` is how many prompt
         tokens are ALREADY cached (prefill starts there; dense: 0).  May
@@ -459,7 +513,10 @@ class ServeEngine:
         ``active`` (they will free resources); otherwise raise.  Any
         device work the admission implies (paged: fresh-page resets, COW
         copies, spill-tier promote scatters) is dispatched here, before
-        the slot's first segment sees the cache."""
+        the slot's first segment sees the cache.  ``budget`` is the
+        decode-token reservation (``None`` → ``max_new_tokens``); a
+        preemption-resuming scheduler passes the request's REMAINING
+        budget so re-admission doesn't over-reserve pages."""
         self.last_stats["resets"] += 1
         return self._reset(cache, s), 0
 
@@ -489,7 +546,7 @@ class ServeEngine:
         """
         self._validate(prompts)
         key = jax.random.PRNGKey(0) if key is None else key
-        queue = list(enumerate(prompts))
+        queue = collections.deque(enumerate(prompts))
         out: List[List[int]] = [[] for _ in prompts]
         B = self.slots
         P, S = self._capacity(prompts)
@@ -516,7 +573,7 @@ class ServeEngine:
                 if admitted is None:  # deferred (pool pressure): retry later
                     break
                 cache, resume = admitted
-                queue.pop(0)
+                queue.popleft()
                 owner[s] = idx
                 n = len(prompt)
                 pend[s, :n] = list(prompt)
@@ -629,15 +686,14 @@ class BlockingServeEngine:
         re-using slots as sequences finish.  Returns one generated-token
         list per prompt (stop token included when one fired), in order."""
         key = jax.random.PRNGKey(0) if key is None else key
-        queue = list(enumerate(prompts))
+        queue = collections.deque(enumerate(prompts))
         out: List[List[int]] = [[] for _ in prompts]
         B = self.slots
         stats: Dict[str, Any] = {"steps": [], "dispatches": 0, "refills": 0}
 
         # initial fill: pad the first B prompts into one batched prefill;
         # short queues fill trailing slots with a dummy row that starts done
-        first = queue[:B]
-        queue = queue[B:]
+        first = [queue.popleft() for _ in range(min(B, len(queue)))]
         rows = [list(p) for _, p in first] + [[self.pad_id] * self.bucket] * (B - len(first))
         toks, lengths = self._pad(rows)
         # no pad tokens -> unmasked prefill (lengths=None): this is the path
@@ -683,7 +739,7 @@ class BlockingServeEngine:
                     continue
                 # slot reuse: single-row position-masked prefill + insert —
                 # synchronous: every other slot stalls for the full prefill
-                idx, prompt = queue.pop(0)
+                idx, prompt = queue.popleft()
                 toks1, len1 = self._pad([list(prompt)])
                 logits1, cache1 = self._prefill(
                     toks1, None if len(prompt) == self.bucket else len1)

@@ -49,7 +49,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -1008,11 +1009,13 @@ class PagedServeEngine(DL.ServeEngine):
         })
         return self._pool_cache
 
-    def _admit(self, cache, s: int, idx: int, prompt, active: bool):
+    def _admit(self, cache, s: int, idx: int, prompt, active: bool,
+               budget: Optional[int] = None):
         st = self.last_stats
+        budget = self.max_new if budget is None else int(budget)
         self._cur_cache = cache  # eviction may demote: read the live pool
         try:
-            plan = self.kv.admit(s, list(prompt), self.max_new,
+            plan = self.kv.admit(s, list(prompt), budget,
                                  label=f"request {idx}")
         except PoolExhausted as e:
             if active:  # running slots will release pages; retry next round
@@ -1078,3 +1081,304 @@ class PagedServeEngine(DL.ServeEngine):
         if self.kv.radix is not None:
             self.last_stats["radix_pages"] = self.kv.radix.pages
             self.last_stats["spilled_pages"] = self.kv.spilled_pages
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware scheduling
+# ---------------------------------------------------------------------------
+
+
+class SLOPagedServeEngine(PagedServeEngine):
+    """Priority/deadline-aware admission with spill-backed preemption over
+    the paged pool.
+
+    The compiled programs are UNTOUCHED — scheduling is pure host Python
+    around the same {segment, reset, copy, promote} set, exploiting two
+    properties of the substrate:
+
+      * **Preempt = publish + release.**  A DECODE slot's cached KV covers
+        the token stream ``prompt + emitted`` up to ``pos`` exactly, so
+        preemption is ``complete_prefill(s, stream[:pos])`` (publish the
+        full pages into the radix tree — idempotent over the already-
+        published prompt prefix) followed by ``release(s)``.  The tree
+        keeps the pages; under later pool pressure they demote through
+        the existing :class:`SpillPool` evict path.  Resume is a plain
+        re-admission of ``prompt + emitted`` with the REMAINING token
+        budget: the radix match maps the cached pages back (promoting
+        spilled ones through the promote scatter) and prefill restarts at
+        the match boundary — the ordinary ``_admit`` resume contract.  If
+        eviction dropped the pages entirely, resume re-prefills them;
+        under greedy sampling the output is token-identical either way.
+      * **Pause = point the row at the trash page.**  A FREE slot and a
+        mid-prefill slot whose table row maps every logical page to the
+        trash page are indistinguishable at the program level (the fused
+        step freezes ``pos``/``pfill``/``tok`` for FREE rows and their
+        dummy writes land on the trash page), so a long prefill that has
+        burned its per-request chunk budget is paused by saving its table
+        row, trashing it, and flipping ``mode`` to FREE — the next
+        dispatch takes the pure-decode fast path, protecting co-resident
+        decodes' inter-token latency.  Resume restores the row.
+
+    Requests are :class:`repro.runtime.decode_loop.Request` (raw token
+    sequences are coerced with ``priority=1``/no deadline).  ``policy``:
+
+      ``"slo"``  — admission order ``(priority, itl_slo, arrival)``;
+                   lower-priority slots (decoding OR mid-prefill — a
+                   part-prefilled slot publishes ``stream[:pfill]`` and
+                   resumes at the last page boundary) are preempted when
+                   a strictly-higher-priority request waits; prefill-chunk
+                   budgets (``Request.prefill_chunks`` or the engine-wide
+                   ``prefill_budget``) pause long prefills between bursts.
+      ``"fifo"`` — arrival order, no preemption, no budgets: the measured
+                   baseline, byte-identical outputs to ``"slo"`` under
+                   greedy sampling.
+
+    Both policies gate admission on ``Request.arrival`` (in dispatch
+    steps): a request is invisible to the scheduler before it arrives, so
+    a seeded trace replays identically — goodput-under-SLO comparisons in
+    ``benchmarks/serve_bench.py`` are deterministic, not wall-clock-noisy.
+
+    Recurrent layouts (ssm/rglru) are REFUSED: preemption restores a slot
+    from mapped pages, but recurrent blocks fold the whole prefix into
+    per-slot state a page cannot restore (the carried ROADMAP item
+    "radix reuse for recurrent layouts").
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, *,
+                 policy: str = "slo", prefill_budget: int = 0, **kw):
+        if policy not in ("slo", "fifo"):
+            raise ValueError(f"policy must be 'slo' or 'fifo', got "
+                             f"{policy!r}")
+        kw.setdefault("radix", True)
+        super().__init__(cfg, params, **kw)
+        if not self.radix_enabled:
+            pat, _, tail = layout_of(cfg)
+            kinds = sorted({k for k in (*pat, *tail) if k != "attn"})
+            if kinds:
+                raise ValueError(
+                    f"SLOPagedServeEngine: layout contains recurrent blocks "
+                    f"{kinds}; preemption resumes a request from its mapped "
+                    f"KV pages, but recurrent state is integrated over the "
+                    f"whole prefix and cannot be restored from a page — "
+                    f"resumed output would silently diverge.  Serve this "
+                    f"layout with PagedServeEngine (FIFO, no preemption); "
+                    f"see the carried ROADMAP item 'radix reuse for "
+                    f"recurrent layouts'")
+            raise ValueError(
+                "SLOPagedServeEngine requires radix=True: preempted "
+                "requests resume through radix prefix matching")
+        self.policy = policy
+        self.prefill_budget = int(prefill_budget)
+
+    def _capacity(self, prompts: Sequence[Sequence[int]]) -> Tuple[int, int]:
+        """A preempted request re-admits ``prompt + emitted`` as its
+        pending buffer, so P must cover ``longest + max_new`` (the base
+        engine only needs ``longest``)."""
+        longest = max((len(p) for p in prompts), default=1)
+        P = -(-max(self.bucket, longest + self.max_new) // self.cp) * self.cp
+        S = P + self.max_new
+        if self.n_host_chunks:
+            S = -(-S // self.n_host_chunks) * self.n_host_chunks
+        return P, S
+
+    def _key(self, r: DL.Request, seq: int, ridx: int) -> Tuple:
+        if self.policy == "slo":
+            return (r.priority, r.itl_slo, seq, ridx)
+        return (seq, ridx)
+
+    # -- the scheduler ---------------------------------------------------
+    def generate(self, prompts: Sequence[Union[DL.Request, Sequence[int]]],
+                 key: Optional[jnp.ndarray] = None) -> List[List[int]]:
+        """Run every request to completion, honouring arrivals, priorities
+        and budgets.  Returns one generated-token list per request, in
+        input order (preempted requests' outputs are stitched across
+        incarnations — token-identical to an uninterrupted run under
+        greedy sampling).
+
+        ``last_stats`` gains ``policy``/``preemptions``/``prefill_pauses``
+        and a per-request ``requests`` list ({arrival, admit_step,
+        first_emit, last_emit, max_gap, preemptions, n_emitted, priority,
+        tier, prompt_len} — all step-indexed, so SLO attainment is
+        deterministic given the trace)."""
+        reqs = [DL.as_request(p) for p in prompts]
+        self._validate([r.tokens for r in reqs])
+        key = jax.random.PRNGKey(0) if key is None else key
+        n = len(reqs)
+        B = self.slots
+        P, S = self._capacity([r.tokens for r in reqs])
+        stats: Dict[str, Any] = {
+            "steps": [], "dispatches": 0, "resets": 0, "capacity": S,
+            "pending_len": P, "policy": self.policy, "preemptions": 0,
+            "prefill_pauses": 0,
+            "requests": [{"arrival": int(r.arrival), "priority": r.priority,
+                          "tier": r.tier, "prompt_len": len(r.tokens),
+                          "admit_step": None, "first_emit": None,
+                          "last_emit": None, "max_gap": 0, "preemptions": 0,
+                          "n_emitted": 0} for r in reqs]}
+        self.last_stats = stats
+        rstat = stats["requests"]
+        cache = self._begin(B, P, S)
+        mode = np.full(B, DL.FREE, np.int32)
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros(B, np.int32)
+        rem = np.zeros(B, np.int32)
+        pfill = np.zeros(B, np.int32)
+        pend = np.full((B, P), self.pad_id, np.int32)
+        plen = np.ones(B, np.int32)
+        owner: List[Optional[int]] = [None] * B
+        emitted: List[List[int]] = [[] for _ in reqs]
+        paused = [False] * B        # mid-prefill, parked on the trash row
+        saved_rows: List[Optional[np.ndarray]] = [None] * B
+        skip = [0] * B              # paused rounds left before resume
+        burst = [0] * B             # prefill chunks since admit/resume
+        order = sorted(range(n), key=lambda i: (reqs[i].arrival, i))
+        fptr = 0
+        ready: List[Tuple] = []     # heap of self._key(...) entries
+        seq = n                     # requeue seqnos, past all initial ones
+        step = 0                    # dispatch-step clock
+
+        def preempt(s: int) -> None:
+            ridx = owner[s]
+            stream = list(reqs[ridx].tokens) + emitted[ridx]
+            # KV is cached for positions [0, pos) when decoding and
+            # [0, pfill) mid-prefill: publish that prefix's full pages,
+            # then release — the radix tree keeps them, so re-admission
+            # resumes at the last page boundary instead of restarting
+            cached = int(pos[s]) if mode[s] == DL.DECODE else int(pfill[s])
+            self.kv.complete_prefill(s, stream[:cached])
+            self._release(s)
+            owner[s] = None
+            mode[s] = DL.FREE
+            burst[s] = 0
+            rstat[ridx]["preemptions"] += 1
+            stats["preemptions"] += 1
+            nonlocal seq
+            heapq.heappush(ready, self._key(reqs[ridx], seq, ridx))
+            seq += 1
+
+        def preempt_for(head_pri: int) -> bool:
+            if self.policy != "slo":
+                return False
+            cands = [s for s in range(B)
+                     if owner[s] is not None and not paused[s]
+                     and mode[s] in (DL.DECODE, DL.PREFILL)
+                     and reqs[owner[s]].priority > head_pri]
+            if not cands:
+                return False
+            preempt(max(cands, key=lambda s: (reqs[owner[s]].priority, s)))
+            return True
+
+        while True:
+            # resume paused prefills (one full round parked first: the
+            # intervening dispatch takes the decode fast path)
+            for s in range(B):
+                if not paused[s]:
+                    continue
+                if skip[s] > 0:
+                    skip[s] -= 1
+                    continue
+                self.kv.table[s, :] = saved_rows[s]
+                self._table_dev = None
+                mode[s] = DL.PREFILL
+                paused[s] = False
+                burst[s] = 0
+            # arrivals up to the current step become schedulable
+            while fptr < n and reqs[order[fptr]].arrival <= step:
+                ridx = order[fptr]
+                fptr += 1
+                heapq.heappush(ready, self._key(reqs[ridx], ridx, ridx))
+            # admission: fill free slots from the ready heap, preempting
+            # lower-priority decodes when the head outranks them
+            progress = True
+            while ready and progress:
+                progress = False
+                free = [s for s in range(B) if owner[s] is None]
+                if not free:
+                    progress = preempt_for(reqs[ready[0][-1]].priority)
+                    continue
+                s = free[0]
+                entry = heapq.heappop(ready)
+                ridx = entry[-1]
+                r = reqs[ridx]
+                pending = list(r.tokens) + emitted[ridx]
+                budget = self.max_new - len(emitted[ridx])
+                active = any(o is not None for o in owner)
+                admitted = self._admit(cache, s, ridx, pending, active,
+                                       budget=budget)
+                if admitted is None:  # pool-exhausted: retry after preempt
+                    heapq.heappush(ready, entry)
+                    progress = preempt_for(r.priority)
+                    continue
+                cache, resume = admitted
+                owner[s] = ridx
+                np_ = len(pending)
+                pend[s, :np_] = pending
+                pend[s, np_:] = self.pad_id
+                plen[s], pfill[s], mode[s] = np_, resume, DL.PREFILL
+                rem[s], pos[s], tok[s] = budget, 0, self.pad_id
+                burst[s] = 0
+                if rstat[ridx]["admit_step"] is None:
+                    rstat[ridx]["admit_step"] = step
+                progress = True
+            if all(o is None for o in owner):
+                if fptr < n:  # idle: jump the clock to the next arrival
+                    step = max(step, int(reqs[order[fptr]].arrival))
+                    continue
+                break
+            key, sub = jax.random.split(key)
+            n_prefilling = int((mode == DL.PREFILL).sum())
+            t0 = time.perf_counter()
+            emits, valids, aux = self._dispatch(
+                cache, mode, tok, pos, sub, rem, pfill, pend, plen)
+            cache = aux["cache"]
+            mode, tok, pos, rem, pfill, em, va = (
+                np.array(x) for x in jax.device_get(
+                    (aux["mode"], aux["tok"], aux["pos"], aux["rem"],
+                     aux["pfill"], emits, valids)))
+            dt = time.perf_counter() - t0
+            stats["dispatches"] += 1
+            stats["steps"].append({"ms": dt * 1e3, "prefilling": n_prefilling,
+                                   "emitted": int(va.sum()), "step": step})
+            self._post_dispatch(mode, pfill, plen, pend, owner)
+            for s in range(B):
+                if owner[s] is None:
+                    continue
+                ridx = owner[s]
+                toks = [int(t) for t, v in zip(em[s], va[s]) if v]
+                if toks:
+                    rs = rstat[ridx]
+                    if rs["first_emit"] is None:
+                        rs["first_emit"] = step
+                    if rs["last_emit"] is not None:
+                        rs["max_gap"] = max(rs["max_gap"],
+                                            step - rs["last_emit"])
+                    rs["last_emit"] = step
+                    emitted[ridx].extend(toks)
+                if paused[s]:  # parked: FREE at program level, still owned
+                    continue
+                if mode[s] == DL.FREE:
+                    self._release(s)
+                    owner[s] = None
+            # prefill-chunk budgets: park a long prefill so co-resident
+            # decodes get a pure-decode dispatch before it continues
+            if self.policy == "slo":
+                any_decode = any(int(m) == DL.DECODE for m in mode)
+                for s in range(B):
+                    if owner[s] is None or paused[s] or mode[s] != DL.PREFILL:
+                        continue
+                    burst[s] += 1
+                    r = reqs[owner[s]]
+                    b = r.prefill_chunks or self.prefill_budget
+                    if b and burst[s] >= b and any_decode:
+                        saved_rows[s] = self.kv.table[s].copy()
+                        self.kv.table[s, :] = self.kv.trash
+                        self._table_dev = None
+                        mode[s] = DL.FREE
+                        paused[s] = True
+                        skip[s] = 1
+                        stats["prefill_pauses"] += 1
+            step += 1
+        self._end(cache)
+        for i in range(n):
+            rstat[i]["n_emitted"] = len(emitted[i])
+        return emitted

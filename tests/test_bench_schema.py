@@ -64,3 +64,27 @@ def test_bench_kv_store_acceptance():
     assert rows["kv_store_programs_promote"] == 1
     for prog in ("segment", "reset", "copy", "promote"):
         assert rows[f"kv_store_programs_{prog}"] <= 1, prog
+
+
+def test_bench_slo_acceptance():
+    """The SLO-scheduler claims: on the same seeded heavy-tailed trace the
+    SLO-aware policy beats FIFO on goodput-under-SLO and interactive TTFT,
+    actually preempts (spill-backed), emits identical tokens, and stays in
+    the bounded program set."""
+    path = os.path.join(ROOT, "BENCH_slo.json")
+    assert os.path.exists(path), "BENCH_slo.json not committed"
+    with open(path) as f:
+        rows = {r["name"]: r["value"] for r in json.load(f)["slo"]}
+    assert rows["slo_goodput_slo"] >= rows["slo_goodput_fifo"], \
+        "SLO-aware scheduling must not lose goodput to FIFO"
+    assert rows["slo_good_requests_slo"] >= rows["slo_good_requests_fifo"]
+    assert rows["slo_preemptions_slo"] >= 1, \
+        "the workload must exercise spill-backed preemption"
+    assert rows["slo_interactive_p95_ttft_slo"] <= \
+        rows["slo_interactive_p95_ttft_fifo"], \
+        "prioritizing interactive requests must not worsen their TTFT"
+    assert rows["slo_outputs_match"] == 1, \
+        "scheduling may reorder WHEN tokens appear, never WHICH"
+    assert rows["slo_programs_segment"] == 1
+    for prog in ("segment", "reset", "copy", "promote"):
+        assert rows[f"slo_programs_{prog}"] <= 1, prog

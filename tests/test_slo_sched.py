@@ -1,0 +1,225 @@
+"""SLO-aware scheduler (`runtime/paged.py::SLOPagedServeEngine`):
+preemption by page spill/publish is LOSSLESS (preempted-then-resumed ==
+uninterrupted solo, token for token), prefill-budget pauses and the FIFO
+baseline preserve outputs, recurrent layouts are refused with a reason,
+no request starves under sustained deferral/preemption pressure, and the
+compiled-program set stays bounded across preempt/resume cycles."""
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.parallel import ParallelContext
+from repro.models import transformer as T
+from repro.runtime import decode_loop as DL
+from repro.runtime import paged as PG
+
+
+@functools.lru_cache(maxsize=2)
+def setup(name):
+    cfg = dataclasses.replace(reduced(get_config(name)), param_dtype="float32",
+                              remat="none")
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def pool_kw(pool):
+    """Engine kwargs per pool placement: on-device vs host-streamed."""
+    if pool == "host":
+        return dict(n_host_chunks=2, par=ParallelContext(mesh=None))
+    return {}
+
+
+def prompts_for(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    return ([int(t) for t in rng.integers(0, V, 13)],
+            [int(t) for t in rng.integers(0, V, 5)])
+
+
+def solo_ref(cfg, params, prompt, *, gen=8, bucket=16, **kw):
+    """Uninterrupted single-request run on a FRESH engine of the same
+    class/config — the parity reference for preempted runs."""
+    eng = PG.SLOPagedServeEngine(cfg, params, slots=1, bucket=bucket,
+                                 max_new_tokens=gen, page_size=4, segment=1,
+                                 **kw)
+    return eng.generate([prompt])[0]
+
+
+@pytest.mark.parametrize("pool", ["device", "host"])
+def test_preempt_resume_matches_solo(pool):
+    """A decoding low-priority request preempted by a high-priority
+    arrival (pages published to the radix tree, slot released, later
+    re-admitted with its remaining budget) emits exactly the tokens an
+    uninterrupted solo run emits — over the on-device AND the
+    host-streamed pool."""
+    cfg, params = setup("llama3.2-1b")
+    long_p, short_p = prompts_for(cfg)
+    kw = pool_kw(pool)
+    ref_long = solo_ref(cfg, params, long_p, **kw)
+    ref_short = solo_ref(cfg, params, short_p, **kw)
+    eng = PG.SLOPagedServeEngine(cfg, params, slots=1, bucket=16,
+                                 max_new_tokens=8, page_size=4, segment=1,
+                                 spill_pages=8, **kw)
+    out = eng.generate([
+        DL.Request(tokens=tuple(long_p), priority=1, arrival=0),
+        DL.Request(tokens=tuple(short_p), priority=0, arrival=6)])
+    st = eng.last_stats
+    assert st["preemptions"] >= 1, "scenario must actually preempt"
+    assert out[0] == ref_long
+    assert out[1] == ref_short
+    # the preempted request's record names its disruption
+    assert st["requests"][0]["preemptions"] >= 1
+    assert st["requests"][1]["preemptions"] == 0
+
+
+def test_preempt_mid_prefill_matches_solo():
+    """Preempting a slot that is still PREFILLING publishes the pages of
+    the already-computed prefix, so the resume radix-matches them back
+    instead of restarting from token 0 — and output parity still holds."""
+    cfg, params = setup("llama3.2-1b")
+    rng = np.random.default_rng(3)
+    long_p = [int(t) for t in rng.integers(0, cfg.vocab_size, 30)]
+    _, short_p = prompts_for(cfg)
+    ref_long = solo_ref(cfg, params, long_p, bucket=40, prefill_chunk=4)
+    ref_short = solo_ref(cfg, params, short_p, bucket=40, prefill_chunk=4)
+    eng = PG.SLOPagedServeEngine(cfg, params, slots=1, bucket=40,
+                                 max_new_tokens=8, page_size=4, segment=1,
+                                 prefill_chunk=4, spill_pages=16)
+    out = eng.generate([
+        DL.Request(tokens=tuple(long_p), priority=1, arrival=0),
+        DL.Request(tokens=tuple(short_p), priority=0, arrival=3)])
+    st = eng.last_stats
+    assert st["preemptions"] >= 1
+    assert st["prefix_hit_tokens"] > 0, \
+        "resume must reuse the published partial prefill"
+    assert out == [ref_long, ref_short]
+
+
+def test_prefill_budget_pause_parity():
+    """A long prefill that exhausts its chunk budget pauses (table row
+    parked on the trash page, mode FREE) while a co-resident decode runs,
+    then resumes — outputs identical to unbudgeted solo runs."""
+    cfg, params = setup("llama3.2-1b")
+    rng = np.random.default_rng(4)
+    long_p = [int(t) for t in rng.integers(0, cfg.vocab_size, 25)]
+    _, short_p = prompts_for(cfg)
+    ref_long = solo_ref(cfg, params, long_p, bucket=32, prefill_chunk=4)
+    ref_short = solo_ref(cfg, params, short_p, bucket=32, prefill_chunk=4)
+    eng = PG.SLOPagedServeEngine(cfg, params, slots=2, bucket=32,
+                                 max_new_tokens=8, page_size=4, segment=1,
+                                 prefill_chunk=4, prefill_budget=1)
+    out = eng.generate([
+        DL.Request(tokens=tuple(short_p), priority=0, arrival=0),
+        DL.Request(tokens=tuple(long_p), priority=1, arrival=1)])
+    assert eng.last_stats["prefill_pauses"] >= 1
+    assert out == [ref_short, ref_long]
+
+
+def test_fifo_and_slo_policies_emit_identical_outputs():
+    """Same requests, both policies, fresh engines: scheduling changes
+    WHEN tokens appear, never WHICH tokens appear (greedy sampling)."""
+    cfg, params = setup("llama3.2-1b")
+    long_p, short_p = prompts_for(cfg)
+    reqs = [DL.Request(tokens=tuple(long_p), priority=1, arrival=0),
+            DL.Request(tokens=tuple(short_p), priority=0, arrival=6),
+            DL.Request(tokens=tuple(short_p[::-1]), priority=0, arrival=7)]
+    outs, stats = {}, {}
+    for policy in ("fifo", "slo"):
+        eng = PG.SLOPagedServeEngine(cfg, params, slots=1, bucket=16,
+                                     max_new_tokens=8, page_size=4,
+                                     segment=1, spill_pages=8, policy=policy)
+        outs[policy] = eng.generate(reqs)
+        stats[policy] = eng.last_stats
+    assert outs["fifo"] == outs["slo"]
+    assert stats["fifo"]["preemptions"] == 0
+    assert stats["slo"]["preemptions"] >= 1
+
+
+def test_raw_prompts_still_accepted():
+    """Plain token lists coerce to default-QoS Requests — the engine is a
+    drop-in PagedServeEngine replacement for existing callers."""
+    cfg, params = setup("llama3.2-1b")
+    long_p, short_p = prompts_for(cfg)
+    eng = PG.SLOPagedServeEngine(cfg, params, slots=2, bucket=16,
+                                 max_new_tokens=4, page_size=4, segment=1)
+    base = PG.PagedServeEngine(cfg, params, slots=2, bucket=16,
+                               max_new_tokens=4, page_size=4, segment=1)
+    assert eng.generate([long_p, short_p]) == base.generate([long_p, short_p])
+
+
+@pytest.mark.parametrize("name", ["falcon-mamba-7b", "recurrentgemma-9b"])
+def test_recurrent_layouts_refused(name):
+    """ssm/rglru layouts integrate the prefix into per-slot state a mapped
+    page cannot restore: the SLO engine must refuse, naming the reason
+    (the carried ROADMAP item), not silently corrupt resumed outputs."""
+    cfg, params = setup(name)
+    with pytest.raises(ValueError, match="recurrent"):
+        PG.SLOPagedServeEngine(cfg, params, slots=1, bucket=8,
+                               max_new_tokens=2, page_size=4)
+
+
+def test_radix_disabled_refused():
+    cfg, params = setup("llama3.2-1b")
+    with pytest.raises(ValueError, match="radix"):
+        PG.SLOPagedServeEngine(cfg, params, slots=1, bucket=8,
+                               max_new_tokens=2, page_size=4, radix=False)
+
+
+def test_bad_policy_refused():
+    cfg, params = setup("llama3.2-1b")
+    with pytest.raises(ValueError, match="policy"):
+        PG.SLOPagedServeEngine(cfg, params, slots=1, bucket=8,
+                               max_new_tokens=2, page_size=4, policy="lifo")
+
+
+def test_no_starvation_under_pressure():
+    """Sustained high-priority arrivals over a pool too small to hold
+    everyone: low-priority requests are deferred and preempted, but every
+    admitted request still runs to completion (full budget emitted)."""
+    cfg, params = setup("llama3.2-1b")
+    rng = np.random.default_rng(5)
+    V = cfg.vocab_size
+    gen = 6
+    reqs = []
+    for i in range(2):  # long low-priority background work, arrives first
+        p = tuple(int(t) for t in rng.integers(0, V, 14))
+        reqs.append(DL.Request(tokens=p, priority=1, arrival=0))
+    for i in range(6):  # a drumbeat of short high-priority requests
+        p = tuple(int(t) for t in rng.integers(0, V, 4))
+        reqs.append(DL.Request(tokens=p, priority=0, arrival=2 + 3 * i))
+    # n_pages sized for ~2 resident requests: admissions must defer
+    eng = PG.SLOPagedServeEngine(cfg, params, slots=2, bucket=20,
+                                 max_new_tokens=gen, page_size=4, segment=1,
+                                 n_pages=14, spill_pages=16)
+    out = eng.generate(reqs)
+    st = eng.last_stats
+    assert st["preemptions"] >= 1, "pressure scenario must preempt"
+    assert all(len(o) == gen for o in out), \
+        f"every request must complete its budget: {[len(o) for o in out]}"
+    assert all(r["first_emit"] is not None for r in st["requests"])
+
+
+@pytest.mark.slow
+def test_preempt_resume_program_set():
+    """The CI bounded-program gate: the full FIFO-vs-SLO bench workload —
+    preemptions, pauses, spill promotes and all — compiles NOTHING after
+    warm-up, and the set stays {segment, reset, copy, promote} x 1."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import serve_bench as SB
+
+    r = SB.slo_workload()
+    assert r["slo"]["preemptions"] >= 1
+    assert r["outputs_match"]
+    for policy in ("fifo", "slo"):
+        assert r[policy]["programs"] == r[policy]["programs_before"], \
+            f"{policy}: measured run compiled new programs"
+        assert set(r[policy]["programs"]) == {"segment", "reset", "copy",
+                                              "promote"}
+        assert all(v == 1 for v in r[policy]["programs"].values())
+    assert r["slo"]["goodput"] >= r["fifo"]["goodput"]

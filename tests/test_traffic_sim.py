@@ -1,0 +1,123 @@
+"""Heavy-tailed traffic simulator (`benchmarks/serve_bench.py::
+traffic_trace`): seeded determinism (in-process and across OS processes),
+arrival-time monotonicity and Zipf prefix-share frequencies as
+properties (via the ``tests/_hypothesis_compat`` shim), tier/length/
+burst structure sanity."""
+import hashlib
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, ROOT)
+
+from benchmarks import serve_bench as SB  # noqa: E402
+
+
+def trace_digest(trace) -> str:
+    """Stable fingerprint of a trace: every field of every request."""
+    blob = repr([(r.idx, r.arrival, r.tokens, r.prefix_id, r.tier,
+                  r.priority, r.ttft_slo, r.itl_slo, r.prefill_chunks)
+                 for r in trace])
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def test_same_seed_same_trace():
+    a = SB.traffic_trace(seed=7, n_requests=40)
+    b = SB.traffic_trace(seed=7, n_requests=40)
+    assert a == b
+    assert SB.traffic_trace(seed=8, n_requests=40) != a
+
+
+def test_cross_process_determinism():
+    """The same seed yields a byte-identical trace in a fresh OS process —
+    the generator leans only on ``numpy.random.default_rng`` (PCG64), not
+    process-salted ``hash`` or global RNG state."""
+    here = trace_digest(SB.traffic_trace(seed=11, n_requests=30))
+    prog = (
+        "import sys; sys.path[:0] = [r'{root}', r'{src}']\n"
+        "from benchmarks import serve_bench as SB\n"
+        "from tests.test_traffic_sim import trace_digest\n"
+        "print(trace_digest(SB.traffic_trace(seed=11, n_requests=30)))\n"
+    ).format(root=os.path.abspath(ROOT),
+             src=os.path.abspath(os.path.join(ROOT, "src")))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(ROOT), os.path.abspath(os.path.join(ROOT, "src"))])
+    got = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert got.returncode == 0, got.stderr
+    assert got.stdout.strip() == here
+
+
+@settings(max_examples=8)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       rate=st.floats(min_value=0.05, max_value=2.0))
+def test_arrivals_monotone(seed, rate):
+    trace = SB.traffic_trace(seed=seed, n_requests=30, rate=rate)
+    arr = [r.arrival for r in trace]
+    assert all(a >= 0 and isinstance(a, int) for a in arr)
+    assert all(b >= a for a, b in zip(arr, arr[1:])), "arrivals must be " \
+        "non-decreasing in request order"
+    assert [r.idx for r in trace] == list(range(30))
+
+
+@settings(max_examples=6)
+@given(seed=st.integers(min_value=0, max_value=1_000),
+       zipf_a=st.sampled_from([0.8, 1.1, 1.5]))
+def test_zipf_prefix_shares(seed, zipf_a):
+    """Observed prefix frequencies track the 1/rank^a weights: the top
+    prefix's share lands within a generous tolerance of its weight, and
+    rank 0 strictly dominates the tail rank."""
+    n, n_prefixes = 400, 4
+    trace = SB.traffic_trace(seed=seed, n_requests=n,
+                             n_prefixes=n_prefixes, zipf_a=zipf_a)
+    w = np.array([1.0 / (k + 1) ** zipf_a for k in range(n_prefixes)])
+    w /= w.sum()
+    counts = np.bincount([r.prefix_id for r in trace], minlength=n_prefixes)
+    assert counts.sum() == n
+    assert abs(counts[0] / n - w[0]) < 0.12
+    assert counts[0] > counts[-1], "Zipf head must dominate the tail"
+
+
+def test_tiers_and_lengths():
+    """Every request inherits its tier's QoS contract, and its unique tail
+    length stays inside the tier's [lo, hi] band."""
+    trace = SB.traffic_trace(seed=1, n_requests=200, prefix_len=8)
+    tiers = {t.name: t for t in SB.DEFAULT_TIERS}
+    by_tier = {}
+    for r in trace:
+        t = tiers[r.tier]
+        assert r.priority == t.priority
+        assert r.ttft_slo == t.ttft_slo and r.itl_slo == t.itl_slo
+        assert r.prefill_chunks == t.prefill_chunks
+        tail = len(r.tokens) - 8
+        assert t.tail_lo <= tail <= t.tail_hi, (r.tier, tail)
+        by_tier[r.tier] = by_tier.get(r.tier, 0) + 1
+    # 0.7/0.3 split: interactive dominates over 200 draws
+    assert by_tier["interactive"] > by_tier["batch"]
+
+
+def test_prefix_sharing_is_real():
+    """Requests with the same prefix_id open with the same tokens — the
+    radix tree's hit substrate — and sharing actually occurs."""
+    trace = SB.traffic_trace(seed=2, n_requests=50, prefix_len=8)
+    heads = {}
+    for r in trace:
+        head = r.tokens[:8]
+        assert heads.setdefault(r.prefix_id, head) == head
+    counts = np.bincount([r.prefix_id for r in trace])
+    assert counts.max() >= 2, "Zipf sharing must produce repeated prefixes"
+
+
+def test_bursts_cluster_arrivals():
+    """With burst_p=1 every gap delivers burst_k simultaneous requests:
+    arrivals come in equal-valued runs of burst_k."""
+    trace = SB.traffic_trace(seed=3, n_requests=12, burst_p=1.0, burst_k=3)
+    arr = [r.arrival for r in trace]
+    for g in range(0, 12, 3):
+        assert len({arr[g], arr[g + 1], arr[g + 2]}) == 1, arr
