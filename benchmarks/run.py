@@ -67,6 +67,7 @@ def main() -> None:
         "serve_mesh": serve_bench.run_serve_mesh,
         "kv_store": serve_bench.run_kv_store,
         "slo": serve_bench.run_slo,
+        "failover": serve_bench.run_failover,
     }
     sel = args.only or list(suites)
     failures = 0

@@ -866,6 +866,175 @@ def run_serve_mesh() -> List[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# failover: seeded fault schedule — completion + goodput vs the abort baseline
+# ---------------------------------------------------------------------------
+
+
+def failover_workload(*, replicas: int = 2, tenants: int = 4,
+                      rounds: int = 2, prefix_len: int = 48, suffix: int = 8,
+                      gen: int = 8, page_size: int = 8, slots: int = 2,
+                      spill_pages: int = 64, seed: int = 0) -> dict:
+    """The failover acceptance workload: per-tenant shared-prefix sessions
+    over router-fronted engine replicas, run under a seeded fault schedule
+    in four scenarios —
+
+    * **nofault**: the reference run (and the output oracle);
+    * **abort**: the same mid-workload permanent crash under the legacy
+      ``failover=False`` contract — the crashed round is thrown away
+      whole, measuring what brittleness costs;
+    * **failover**: crash + re-home through the shared KV store — every
+      request must complete with outputs identical to nofault, and the
+      re-homed sessions must recover their prefixes from the dead
+      replica's published pages (``recovered_prefix_tokens > 0``);
+    * **rejoin**: the crashed replica comes back as a FRESH engine (a
+      restart loses device state), rejoins, and serves its returning
+      sessions warm from its own published cache.
+
+    The fault (``raise`` on the victim's 2nd dispatch) is deterministic:
+    round 1 warms every radix tree and publishes to the store, round 2
+    crashes the victim mid-workload."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.launch.faults import Fault, FaultyReplica
+    from repro.launch.kvstore import SharedKVStore
+    from repro.launch.router import ReplicaFailed, ReplicaRouter
+    from repro.runtime import paged as PG
+
+    cfg, params, _, _ = _setup()
+    rng = np.random.default_rng(seed)
+    pfx = [rng.integers(0, cfg.vocab_size, size=prefix_len).tolist()
+           for _ in range(tenants)]
+    prompts = [pfx[i % tenants]
+               + rng.integers(0, cfg.vocab_size, size=suffix).tolist()
+               for i in range(tenants)]
+    sessions = [f"tenant-{i % tenants}" for i in range(tenants)]
+
+    def quiet(msg):
+        pass
+
+    def engine():
+        return PG.PagedServeEngine(
+            cfg, params, slots=slots, bucket=prefix_len + suffix,
+            max_new_tokens=gen, segment=2, prefill_chunk=page_size,
+            page_size=page_size, spill_pages=spill_pages)
+
+    def run(rt, n=rounds):
+        """n identical rounds; a round that aborts (legacy ReplicaFailed)
+        loses ALL its outputs — that asymmetry IS the measurement."""
+        outs, served, wall = [], 0, 0.0
+        for _ in range(n):
+            t0 = time.perf_counter()
+            try:
+                o = rt.generate(prompts, sessions=sessions)
+                served += len(o)
+            except ReplicaFailed:
+                o = None
+            wall += time.perf_counter() - t0
+            outs.append(o)
+        return outs, served, wall
+
+    total = rounds * len(prompts)
+    fault = Fault("raise", 1)  # dispatch 0 = round 1 OK, dies in round 2
+
+    # nofault — also fixes the victim: homes are construction-independent
+    ref_rt = ReplicaRouter([engine() for _ in range(replicas)], warn=quiet)
+    ref_outs, ref_served, ref_wall = run(ref_rt)
+    victim = ref_rt.home_of(prompts[0], sessions[0])
+
+    # abort baseline: same crash, legacy failover=False contract
+    ab = [engine() for _ in range(replicas)]
+    ab[victim] = FaultyReplica(ab[victim], [fault])
+    _, ab_served, ab_wall = run(ReplicaRouter(ab, failover=False,
+                                              warn=quiet))
+
+    # crash + failover through the shared store
+    store = SharedKVStore(tempfile.mkdtemp(prefix="failover_bench"))
+    fo_eng = [engine() for _ in range(replicas)]
+    fo = list(fo_eng)
+    fo[victim] = FaultyReplica(fo_eng[victim], [fault])
+    fo_rt = ReplicaRouter(fo, max_retries=1, kv_store=store, warn=quiet)
+    fo_outs, fo_served, fo_wall = run(fo_rt)
+    fo_stats = dict(fo_rt.last_stats["failover"])
+
+    # rejoin: restarted process behind the same seat — fresh engine, warm
+    # only through its own published store file
+    fo_eng[victim] = engine()
+    fo[victim].inner = fo_eng[victim]
+    fo[victim].heal()
+    rejoin_restored = fo_rt.rejoin(victim)
+    _, rj_served, rj_wall = run(fo_rt, n=1)
+    rj_row = fo_rt.last_stats["per_replica"][victim]
+    rj_hit = rj_row.get("prefix_hit_tokens", 0) / max(
+        rj_row.get("prompt_tokens", 1), 1)
+
+    survivor = fo_eng[1 - victim] if replicas == 2 else \
+        fo_eng[(victim + 1) % replicas]
+    return {
+        "replicas": replicas, "tenants": tenants, "rounds": rounds,
+        "requests_total": total, "victim": victim,
+        "nofault": {"served": ref_served, "completion": ref_served / total,
+                    "goodput": round(ref_served / ref_wall, 2)},
+        "abort": {"served": ab_served, "completion": ab_served / total,
+                  "goodput": round(ab_served / ab_wall, 2)},
+        "failover": {"served": fo_served, "completion": fo_served / total,
+                     "goodput": round(fo_served / fo_wall, 2),
+                     **fo_stats},
+        "rejoin": {"served": rj_served,
+                   "completion": rj_served / len(prompts),
+                   "restored_pages": rejoin_restored,
+                   "hit_rate": round(rj_hit, 3)},
+        "outputs_match": fo_outs == ref_outs,
+        "programs": survivor.compiled_programs(),
+    }
+
+
+def run_failover() -> List[str]:
+    """benchmarks.run entry for the ``failover`` suite: completion rate
+    and goodput under a seeded fault schedule — fault-free vs the legacy
+    abort-everything baseline vs crash+failover (token-identical, shared-
+    store recovery) vs crash+rejoin."""
+    r = failover_workload()
+    fo = r["failover"]
+    print(f"failover: victim=replica{r['victim']}; completion "
+          f"nofault={r['nofault']['completion']:.2f} "
+          f"abort={r['abort']['completion']:.2f} "
+          f"failover={fo['completion']:.2f} "
+          f"rejoin={r['rejoin']['completion']:.2f}; "
+          f"deaths={fo['deaths']} rehomed={fo['rehomed_requests']} "
+          f"recovered_prefix={fo['recovered_prefix_tokens']} "
+          f"(pages={fo['recovered_pages']}); match={r['outputs_match']}")
+    rows = ["bench,name,value,derived"]
+    rows.append(f"bench,failover_requests_total,{r['requests_total']},count")
+    for mode in ("nofault", "abort", "failover"):
+        m = r[mode]
+        rows.append(f"bench,failover_{mode}_completion_rate,"
+                    f"{m['completion']:.3f},fraction")
+        rows.append(f"bench,failover_{mode}_goodput,{m['goodput']},req/s")
+    rows.append(f"bench,failover_deaths,{fo['deaths']},count")
+    rows.append(f"bench,failover_retries,{fo['retries']},count")
+    rows.append(f"bench,failover_rehomed_requests,"
+                f"{fo['rehomed_requests']},count")
+    rows.append(f"bench,failover_rehomed_sessions,"
+                f"{fo['rehomed_sessions']},count")
+    rows.append(f"bench,failover_recovered_prefix_tokens,"
+                f"{fo['recovered_prefix_tokens']},count")
+    rows.append(f"bench,failover_recovered_pages,"
+                f"{fo['recovered_pages']},count")
+    rows.append(f"bench,failover_outputs_match,{int(r['outputs_match'])},bool")
+    rows.append(f"bench,failover_rejoin_completion_rate,"
+                f"{r['rejoin']['completion']:.3f},fraction")
+    rows.append(f"bench,failover_rejoin_restored_pages,"
+                f"{r['rejoin']['restored_pages']},pages")
+    rows.append(f"bench,failover_rejoin_hit_rate,"
+                f"{r['rejoin']['hit_rate']},fraction")
+    for k, v in r["programs"].items():
+        rows.append(f"bench,failover_programs_{k},{v},count")
+    return rows
+
+
 def staggered_workload(blocking: bool = False, *, slots: int = 4,
                        requests: int = 12, bucket: int = 32, cp: int = 4,
                        gen: int = 24, seed: int = 0, warmup: bool = True) -> dict:

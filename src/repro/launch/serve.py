@@ -40,6 +40,17 @@ session-affine router (``launch/router.py``; ``--router rr`` is the
 locality-shredding baseline), with per-replica request/prefix-hit stats.
 On CPU the device count is forced automatically (train.py's host8
 pattern).
+
+The router survives replica failure by default: ``--fault-plan
+"1:raise@2"`` injects a deterministic crash (``launch/faults.py``) to
+watch it happen, ``--retry``/``--dispatch-timeout`` tune the
+suspect-state retry budget and the stall deadline, and
+``--shared-kv-store DIR`` gives replicas a shared prefix-cache
+directory so a dead replica's published pages restore into survivors
+and its re-homed sessions resume warm (``prefix_hit_tokens > 0``
+instead of a cold prefill).  Failover stats (deaths, retries, re-homed
+sessions, recovered prefix tokens) print alongside the per-replica
+ones.
 """
 from __future__ import annotations
 
@@ -58,6 +69,17 @@ class _MeshReplica:
     def generate(self, prompts):
         with self.par.mesh:
             return self.engine.generate(prompts)
+
+    # prefix-cache persistence proxies: the shared KV store publishes /
+    # restores through the replica, and page reads touch mesh-sharded
+    # arrays, so they run under the replica's mesh like generate()
+    def save_kv_store(self, path):
+        with self.par.mesh:
+            return self.engine.save_kv_store(path)
+
+    def restore_kv_store(self, path):
+        with self.par.mesh:
+            return self.engine.restore_kv_store(path)
 
     @property
     def last_stats(self):
@@ -189,6 +211,21 @@ def _mesh_engine_main(args, cfg, params, prompts):
     if len(devs) < per * n:
         raise SystemExit(f"--mesh {args.mesh} --replicas {n} needs "
                          f"{per * n} devices, have {len(devs)}")
+    fault_plan = {}
+    if args.fault_plan:
+        from repro.launch.faults import parse_fault_plan
+        fault_plan = parse_fault_plan(args.fault_plan)
+        bad = [r for r in fault_plan if r >= n]
+        if bad:
+            raise SystemExit(f"--fault-plan names replicas {bad} but only "
+                             f"{n} exist")
+    kv_store = None
+    if args.shared_kv_store:
+        if not args.paged:
+            raise SystemExit("--shared-kv-store needs --paged (the prefix "
+                             "cache lives in the radix tree)")
+        from repro.launch.kvstore import SharedKVStore
+        kv_store = SharedKVStore(args.shared_kv_store)
     bucket = args.prompt_len + args.shared_prefix
     kw = dict(slots=args.batch, bucket=bucket, max_new_tokens=args.gen,
               segment=args.segment, n_host_chunks=args.host_kv_chunks,
@@ -196,16 +233,27 @@ def _mesh_engine_main(args, cfg, params, prompts):
               sampling=DL.SamplingConfig(temperature=args.temperature,
                                          top_k=args.top_k))
     if args.paged:
+        spill = args.spill_pages
+        if kv_store is not None and not spill:
+            # restore lands in the spill tier; give it somewhere to land
+            spill = 4 * args.n_pages if args.n_pages else 64
         kw.update(page_size=args.page_size, n_pages=args.n_pages,
-                  spill_pages=args.spill_pages)
+                  spill_pages=spill)
     replicas = []
     for r in range(n):
         par = serve_mesh(data, model, devices=devs[r * per:(r + 1) * per])
         with par.mesh:
             eng = (PagedServeEngine if args.paged else DL.ServeEngine)(
                 cfg, params, par=par, **kw)
-        replicas.append(_MeshReplica(eng, par))
-    router = ReplicaRouter(replicas, policy=args.router)
+        rep = _MeshReplica(eng, par)
+        if r in fault_plan:
+            from repro.launch.faults import FaultyReplica
+            rep = FaultyReplica(rep, fault_plan[r], name=f"replica{r}")
+        replicas.append(rep)
+    router = ReplicaRouter(replicas, policy=args.router,
+                           max_retries=args.retry,
+                           dispatch_timeout=args.dispatch_timeout or None,
+                           kv_store=kv_store)
     t0 = time.perf_counter()
     outs = router.generate(prompts)
     dt = time.perf_counter() - t0
@@ -223,6 +271,17 @@ def _mesh_engine_main(args, cfg, params, prompts):
         print(line)
     if args.router == "affine" and st["spilled"]:
         print(f"  {st['spilled']} requests spilled off their home replica")
+    fo = st.get("failover")
+    if fo and (fo["deaths"] or fo["retries"] or fo["timeouts"]):
+        print(f"  failover: {fo['deaths']} deaths (dead={fo['dead']}), "
+              f"{fo['retries']} retries, {fo['timeouts']} timeouts, "
+              f"{fo['rehomed_requests']} requests re-homed "
+              f"({fo['rehomed_sessions']} sessions), "
+              f"{fo['recovered_prefix_tokens']} prefix tokens recovered "
+              f"via the shared store ({fo['recovered_pages']} pages "
+              f"restored), {fo['live']}/{n} replicas live")
+    elif fo:
+        print(f"  failover: clean run, {fo['live']}/{n} replicas live")
 
 
 def main():
@@ -289,10 +348,33 @@ def main():
     ap.add_argument("--router", default="affine", choices=["affine", "rr"],
                     help="with --replicas: session-affine dispatch (radix "
                          "locality survives routing) or round-robin")
+    ap.add_argument("--fault-plan", default="",
+                    help="with --replicas: deterministic fault injection, "
+                         "';'-separated R:KIND@N[xC][~S] items (KIND in "
+                         "raise/transient/hang), e.g. '1:raise@2' kills "
+                         "replica 1 on its 3rd dispatch — the router "
+                         "re-homes its work onto survivors")
+    ap.add_argument("--retry", type=int, default=1,
+                    help="with --replicas: dispatch retries before a "
+                         "faulting replica is declared dead")
+    ap.add_argument("--dispatch-timeout", type=float, default=0.0,
+                    help="with --replicas: wall-clock seconds after which "
+                         "a dispatch counts as a fault and its late "
+                         "result is discarded (0 = no timeout)")
+    ap.add_argument("--shared-kv-store", default="",
+                    help="with --replicas + --paged: shared prefix-cache "
+                         "directory (one npz per replica); on replica "
+                         "death the dead replica's published cache "
+                         "restores into survivors so re-homed requests "
+                         "resume warm")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.mesh and not args.engine:
         ap.error("--mesh requires --engine")
+    if (args.fault_plan or args.shared_kv_store) and not args.mesh:
+        ap.error("--fault-plan/--shared-kv-store act on the replica "
+                 "router; they require --mesh (and --replicas > 1 to "
+                 "have anywhere to fail over to)")
     if args.sched and not args.paged:
         ap.error("--sched requires --paged (preemption spills KV pages)")
     if args.sched and args.mesh:

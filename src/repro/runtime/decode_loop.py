@@ -105,7 +105,11 @@ class Request:
                        decodes get a chunk-free (fast-path) step
                        (0 = engine default / unlimited);
       tier           — free-form label carried into per-request stats
-                       (the benchmark's goodput-under-SLO accounting).
+                       (the benchmark's goodput-under-SLO accounting);
+      session        — routing-affinity id read by ``launch/router.py``
+                       (requests of one session hash to one replica, and
+                       re-home together on replica death); ``None`` =
+                       route by prompt-prefix hash.  Engines ignore it.
     """
 
     tokens: Tuple[int, ...]
@@ -114,6 +118,7 @@ class Request:
     itl_slo: float = math.inf
     prefill_chunks: int = 0
     tier: str = ""
+    session: Optional[str] = None
 
 
 def as_request(r: Union[Request, Sequence[int]]) -> Request:

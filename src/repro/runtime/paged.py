@@ -878,14 +878,23 @@ class PagedServeEngine(DL.ServeEngine):
         return SV.page_rows(self._cur_cache, int(pid))
 
     # -- prefix-cache persistence ----------------------------------------
+    # cumulative counters (kv_store_saved_pages / kv_store_restored_pages)
+    # let the serve tier report how much failover recovery actually moved
+    # through the store, across however many publish/restore rounds
     def save_kv_store(self, path: str) -> int:
         """Persist the radix tree + every cached page payload to ``path``."""
-        return self.kv.save(path, self._read_page)
+        n = self.kv.save(path, self._read_page)
+        self.kv_store_saved_pages = getattr(
+            self, "kv_store_saved_pages", 0) + n
+        return n
 
     def restore_kv_store(self, path: str) -> int:
         """Load a persisted prefix cache into the spill tier (pages promote
         to device lazily, on their first radix hit)."""
-        return self.kv.restore(path)
+        n = self.kv.restore(path)
+        self.kv_store_restored_pages = getattr(
+            self, "kv_store_restored_pages", 0) + n
+        return n
 
     def _offload_pool(self, cache):
         """Park the pool's K/V leaves in the offload tier when the engine

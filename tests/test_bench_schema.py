@@ -88,3 +88,33 @@ def test_bench_slo_acceptance():
     assert rows["slo_programs_segment"] == 1
     for prog in ("segment", "reset", "copy", "promote"):
         assert rows[f"slo_programs_{prog}"] <= 1, prog
+
+
+def test_bench_failover_acceptance():
+    """The failover claims: under the seeded fault schedule (permanent
+    crash of 1 replica mid-workload) the router completes 100% of
+    requests token-identically while the legacy abort-everything baseline
+    loses the crashed round; re-homed sessions recover their prefixes
+    through the shared KV store (not a cold recompute); the rejoined
+    replica serves warm; the program set stays bounded."""
+    path = os.path.join(ROOT, "BENCH_failover.json")
+    assert os.path.exists(path), "BENCH_failover.json not committed"
+    with open(path) as f:
+        rows = {r["name"]: r["value"] for r in json.load(f)["failover"]}
+    assert rows["failover_nofault_completion_rate"] == 1.0
+    assert rows["failover_failover_completion_rate"] == 1.0, \
+        "failover must complete EVERY request despite the crash"
+    assert rows["failover_abort_completion_rate"] < 1.0, \
+        "the abort baseline must show the partial loss failover prevents"
+    assert rows["failover_outputs_match"] == 1, \
+        "failover must be invisible in the outputs (greedy-identical)"
+    assert rows["failover_deaths"] == 1
+    assert rows["failover_rehomed_requests"] > 0
+    assert rows["failover_recovered_prefix_tokens"] > 0, \
+        "re-homed requests must recover prefixes, not recompute them"
+    assert rows["failover_recovered_pages"] > 0
+    assert rows["failover_rejoin_completion_rate"] == 1.0
+    assert rows["failover_rejoin_hit_rate"] > 0.9, \
+        "a rejoined replica must serve its returning sessions warm"
+    for prog in ("segment", "reset", "copy", "promote"):
+        assert rows[f"failover_programs_{prog}"] <= 1, prog

@@ -1,0 +1,383 @@
+"""Fault-tolerant serve tier: deterministic fault injection + failover.
+
+Three layers, cheapest first:
+
+* the fault harness itself (`launch/faults.py`) — plans parse, faults
+  fire on exactly the scripted dispatch, heal() clears them;
+* router failover semantics on fake replicas (`launch/router.py`) —
+  health state machine, bounded retry for transients, timeout-as-fault,
+  minimal key movement under death/rejoin, no silent data loss;
+* the acceptance scenario on REAL paged engines: a seeded mid-workload
+  permanent crash of 1 of 2 replicas completes ALL requests with
+  outputs identical to the no-fault run (greedy), re-homed requests
+  recover their prefixes through the shared KV store
+  (`prefix_hit_tokens > 0`, not a cold recompute), and the compiled
+  program set stays {segment, reset, copy, promote} <= 1 per replica.
+"""
+import dataclasses
+import functools
+
+import pytest
+
+from repro.launch.faults import (Fault, FaultInjected, FaultyReplica,
+                                 parse_fault_plan)
+from repro.launch.router import (AllReplicasDead, IncompleteGeneration,
+                                 ReplicaRouter)
+
+
+# ---------------------------------------------------------------------------
+# harness (no jax)
+# ---------------------------------------------------------------------------
+
+
+class Echo:
+    """Minimal replica: returns [first_token, len] per prompt."""
+
+    def __init__(self):
+        self.calls = []
+        self.last_stats = {"prompt_tokens": 0, "prefix_hit_tokens": 0}
+
+    def generate(self, prompts):
+        self.calls.append(list(prompts))
+        self.last_stats = {
+            "prompt_tokens": sum(len(p) for p in prompts),
+            "prefix_hit_tokens": 0}
+        return [[p[0], len(p)] for p in prompts]
+
+
+def test_fault_plan_parses():
+    plan = parse_fault_plan("1:raise@2; 0:transient@1x3 ;2:hang@0~0.25")
+    assert plan[1] == [Fault("raise", 2)]
+    assert plan[0] == [Fault("transient", 1, count=3)]
+    assert plan[2] == [Fault("hang", 0, hang_s=0.25)]
+    with pytest.raises(ValueError, match="fault-plan"):
+        parse_fault_plan("1-raise-2")
+    with pytest.raises(ValueError, match="kind"):
+        parse_fault_plan("0:explode@1")
+
+
+def test_faults_fire_on_scripted_dispatch_only():
+    rep = FaultyReplica(Echo(), [Fault("transient", 1, count=2)])
+    assert rep.generate([[7]]) == [[7, 1]]          # dispatch 0: fine
+    for _ in range(2):                              # dispatches 1, 2: fault
+        with pytest.raises(FaultInjected, match="transient"):
+            rep.generate([[7]])
+    assert rep.generate([[7]]) == [[7, 1]]          # dispatch 3: recovered
+    assert (rep.dispatches, rep.injected) == (4, 2)
+
+
+def test_permanent_raise_until_heal():
+    rep = FaultyReplica(Echo(), [Fault("raise", 0)])
+    for _ in range(3):
+        with pytest.raises(FaultInjected, match="raise"):
+            rep.generate([[1]])
+    rep.heal()
+    assert rep.generate([[1]]) == [[1, 1]]
+
+
+def test_wrapper_passes_everything_else_through():
+    rep = FaultyReplica(Echo())
+    rep.generate([[5, 6]])
+    assert rep.last_stats["prompt_tokens"] == 2  # inner attr via __getattr__
+
+
+# ---------------------------------------------------------------------------
+# router failover on fakes (no jax)
+# ---------------------------------------------------------------------------
+
+
+def quiet(msg):  # the one-shot degradation warning, silenced for tests
+    pass
+
+
+def faulted_router(fault, n=2, prompts=(), **kw):
+    """A router whose fault lands on a replica that actually OWNS work
+    (rendezvous homes depend on the keys, so a fixed index would make
+    the test a coin flip)."""
+    reps = [FaultyReplica(Echo()) for _ in range(n)]
+    rt = ReplicaRouter(reps, warn=quiet, **kw)
+    victim = rt.home_of(prompts[0]) if prompts else 0
+    reps[victim].faults.append(fault)
+    return rt, victim
+
+
+def test_transient_fault_retries_without_rehoming():
+    prompts = [[i, i, i] for i in range(6)]
+    rt, _ = faulted_router(Fault("transient", 0), prompts=prompts,
+                           max_retries=2)
+    out = rt.generate(prompts)
+    assert out == [[p[0], 3] for p in prompts]
+    fo = rt.last_stats["failover"]
+    assert fo["deaths"] == 0 and fo["rehomed_requests"] == 0
+    assert fo["retries"] >= 1
+    assert rt.health == ["healthy", "healthy"]  # suspect cleared on success
+
+
+def test_retry_budget_exhaustion_is_death():
+    prompts = [[i, i, i] for i in range(6)]
+    rt, victim = faulted_router(Fault("transient", 0, count=5),
+                                prompts=prompts, max_retries=1)
+    out = rt.generate(prompts)
+    fo = rt.last_stats["failover"]
+    assert fo["deaths"] == 1 and rt.health[victim] == "dead"
+    assert fo["rehomed_requests"] > 0
+    assert all(len(o) == 2 for o in out)  # work still completed elsewhere
+
+
+def test_hang_past_deadline_counts_as_fault():
+    """A stalled dispatch (deterministic sleep) exceeds the timeout; its
+    late result is discarded, the retry lands after the hang window."""
+    prompts = [[i, i, i] for i in range(6)]
+    rt, _ = faulted_router(Fault("hang", 0, hang_s=0.2), prompts=prompts,
+                           dispatch_timeout=0.05, max_retries=1)
+    out = rt.generate(prompts)
+    assert rt.timeouts >= 1
+    assert all(len(o) == 2 for o in out)
+    assert rt.last_stats["failover"]["deaths"] == 0  # retry succeeded
+
+
+def test_death_moves_only_the_dead_replicas_keys():
+    """Rendezvous hashing: a dead replica's keys re-home; every key whose
+    home survives KEEPS it (survivors keep their radix locality), and
+    rejoin() moves the dead replica's keys back."""
+    rt = ReplicaRouter([Echo() for _ in range(4)], warn=quiet)
+    keys = [[i, i + 1, i + 2, i + 3] for i in range(64)]
+    before = [rt.home_of(k) for k in keys]
+    dead = before[0]  # kill a replica that actually owns keys
+    rt.health[dead] = rt.DEAD
+    after = [rt.home_of(k) for k in keys]
+    moved = sum(1 for b, a in zip(before, after) if b != a)
+    owned = sum(1 for b in before if b == dead)
+    assert moved == owned > 0  # exactly the dead replica's range moved
+    rt.rejoin(dead)
+    assert [rt.home_of(k) for k in keys] == before
+
+
+def test_all_replicas_dead_raises_with_clean_depth():
+    reps = [FaultyReplica(Echo(), [Fault("raise", 0)]) for _ in range(2)]
+    rt = ReplicaRouter(reps, max_retries=0, warn=quiet)
+    with pytest.raises(AllReplicasDead):
+        rt.generate([[1, 2], [3, 4], [5, 6]])
+    assert rt.depth == [0, 0]  # no phantom queue slots for the next run
+
+
+def test_short_output_is_not_silent_data_loss():
+    """Regression (satellite 1): a replica returning too few outputs used
+    to surface as [] for the missing requests — indistinguishable from a
+    genuine empty generation.  Now it is a dispatch fault; with nowhere
+    to fail over to, it raises instead of dropping data."""
+
+    class Short(Echo):
+        def generate(self, prompts):
+            super().generate(prompts)
+            return [[0]] * (len(prompts) - 1)
+
+    rt = ReplicaRouter([Short()], max_retries=0, warn=quiet)
+    with pytest.raises(AllReplicasDead):
+        rt.generate([[1], [2]])
+    # and with a healthy sibling, the work re-homes instead
+    rt2 = ReplicaRouter([Short(), Echo()], max_retries=0, warn=quiet)
+    out = rt2.generate([[i, i] for i in range(4)])
+    assert all(len(o) == 2 for o in out)
+
+
+def test_incomplete_generation_names_missing_requests():
+    err = IncompleteGeneration([3, 5], total=8)
+    assert err.missing == [3, 5]
+    assert "2/8" in str(err)
+
+
+def test_one_shot_degradation_warning():
+    warned = []
+    reps = [FaultyReplica(Echo()) for _ in range(3)]
+    rt = ReplicaRouter(reps, max_retries=0, warn=warned.append)
+    prompts = [[i, i + 1, i + 2] for i in range(24)]
+    homes = {rt.home_of(p) for p in prompts}
+    assert len(homes) >= 2  # need two owners so two deaths can happen
+    for victim in sorted(homes)[:2]:
+        reps[victim].faults.append(Fault("raise", 0))
+    out = rt.generate(prompts)
+    assert rt.last_stats["failover"]["deaths"] == 2
+    assert all(len(o) == 2 for o in out)
+    assert len(warned) == 1  # first death warns, later deaths stats-only
+
+
+def test_failover_false_keeps_legacy_raise():
+    from repro.launch.router import ReplicaFailed
+
+    reps = [Echo(), FaultyReplica(Echo(), [Fault("raise", 0)])]
+    rt = ReplicaRouter(reps, policy="rr", failover=False)
+    with pytest.raises(ReplicaFailed, match="replica 1"):
+        rt.generate([[1], [2]])
+    assert rt.depth == [0, 0]
+
+
+def test_qos_requests_survive_rehoming_intact():
+    """Satellite 3: Request objects (sessions, priorities, budgets) pass
+    through re-homing UNTOUCHED — the survivor receives the exact same
+    objects the dead replica would have."""
+    from repro.runtime import decode_loop as DL
+
+    seen = {}
+
+    class Capture(Echo):
+        def __init__(self, tag):
+            super().__init__()
+            self.tag = tag
+
+        def generate(self, prompts):
+            seen.setdefault(self.tag, []).extend(prompts)
+            return super().generate(
+                [list(p.tokens) for p in prompts])
+
+    reqs = [DL.Request(tokens=(i, i + 1, i + 2), priority=i % 2,
+                       arrival=i, itl_slo=4.0 + i, prefill_chunks=2,
+                       tier="interactive", session=f"tenant-{i % 3}")
+            for i in range(9)]
+    reps = [FaultyReplica(Capture(0)), FaultyReplica(Capture(1))]
+    rt = ReplicaRouter(reps, max_retries=0, warn=quiet)
+    victim = rt.home_of(reqs[0], reqs[0].session)
+    reps[victim].faults.append(Fault("raise", 0))
+    out = rt.generate(reqs)  # sessions read off the requests themselves
+    fo = rt.last_stats["failover"]
+    assert fo["deaths"] == 1 and fo["rehomed_requests"] > 0
+    assert fo["rehomed_sessions"] >= 1
+    assert all(len(o) == 2 for o in out)
+    # every request object reached the surviving replica by IDENTITY: QoS
+    # fields (priority, arrival, itl_slo, prefill_chunks, tier) cannot
+    # have been rewritten en route
+    assert {id(r) for r in reqs} == {id(p) for p in seen[1 - victim]}
+
+
+def test_session_affinity_reads_request_objects():
+    from repro.runtime import decode_loop as DL
+
+    rt = ReplicaRouter([Echo() for _ in range(4)], warn=quiet)
+    same = [DL.Request(tokens=(i,), session="tenant-A") for i in range(8)]
+    assert len({rt.route(r) for r in same}) == 1  # one session, one home
+
+
+# ---------------------------------------------------------------------------
+# acceptance: real engines, shared store, token-identical recovery
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def setup():
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-1b")),
+                              param_dtype="float32", remat="none")
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def make_engine(cfg, params):
+    from repro.runtime import paged as PG
+
+    return PG.PagedServeEngine(cfg, params, slots=2, bucket=24,
+                               max_new_tokens=4, page_size=4, segment=1,
+                               spill_pages=32)
+
+
+def session_workload(cfg, seed=0):
+    """Two rounds of the same per-session prompts (each session's round-2
+    request shares its round-1 prefix), shared 8-token system prompt."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    shared = [int(t) for t in rng.integers(0, V, 8)]
+    prompts, sessions = [], []
+    for s in range(4):
+        body = [int(t) for t in rng.integers(0, V, 8)]
+        prompts.append(shared + body)
+        sessions.append(f"tenant-{s}")
+    return prompts, sessions
+
+
+def run_rounds(router, prompts, sessions):
+    return [router.generate(prompts, sessions=sessions) for _ in range(2)]
+
+
+@pytest.mark.slow
+def test_seeded_crash_completes_all_token_identical(tmp_path):
+    """THE acceptance scenario: warm round, then a permanent crash of 1
+    of 2 replicas mid-workload (its 2nd dispatch).  Every request
+    completes, outputs == the no-fault run token for token (greedy), the
+    re-homed sessions recover their prefixes through the shared store
+    (prefix_hit_tokens > 0 on the re-home dispatch), and no engine
+    compiled anything beyond {segment, reset, copy, promote}."""
+    from repro.launch.kvstore import SharedKVStore
+
+    cfg, params = setup()
+    prompts, sessions = session_workload(cfg)
+
+    # no-fault reference: fresh engines, same two rounds
+    ref_router = ReplicaRouter([make_engine(cfg, params) for _ in range(2)],
+                               warn=quiet)
+    ref = run_rounds(ref_router, prompts, sessions)
+
+    # fault run: same construction + a scripted permanent crash
+    engines = [make_engine(cfg, params) for _ in range(2)]
+    store = SharedKVStore(str(tmp_path / "shared"))
+    rt = ReplicaRouter(engines, max_retries=1, kv_store=store, warn=quiet)
+    victim = rt.home_of(prompts[0], sessions[0])
+    rt.replicas[victim] = FaultyReplica(
+        engines[victim], [Fault("raise", 1)], name=f"replica{victim}")
+    got = run_rounds(rt, prompts, sessions)
+
+    assert got == ref, "failover must be invisible in the outputs"
+    fo = rt.last_stats["failover"]
+    assert fo["deaths"] == 1 and rt.health[victim] == "dead"
+    assert fo["rehomed_requests"] > 0 and fo["rehomed_sessions"] > 0
+    # recovery, not recompute: the re-homed dispatch promoted the dead
+    # replica's published pages out of the shared store
+    assert fo["recovered_pages"] > 0
+    assert fo["recovered_prefix_tokens"] > 0
+    # bounded program set on every engine, fault path included
+    for eng in engines:
+        progs = eng.compiled_programs()
+        assert set(progs) <= {"segment", "reset", "copy", "promote"}
+        assert all(v <= 1 for v in progs.values()), progs
+
+
+@pytest.mark.slow
+def test_rejoin_restores_home_and_warm_cache(tmp_path):
+    """After a crash, rejoin() re-admits the replica: its sessions route
+    home again and its own published cache restores into it, so the
+    first post-rejoin round is warm (prefix hits on its own engine)."""
+    from repro.launch.kvstore import SharedKVStore
+
+    cfg, params = setup()
+    prompts, sessions = session_workload(cfg, seed=1)
+    engines = [make_engine(cfg, params) for _ in range(2)]
+    store = SharedKVStore(str(tmp_path / "shared"))
+    rt = ReplicaRouter(engines, max_retries=0, kv_store=store, warn=quiet)
+    victim = rt.home_of(prompts[0], sessions[0])
+    faulty = FaultyReplica(engines[victim], [Fault("raise", 1)],
+                           name=f"replica{victim}")
+    rt.replicas[victim] = faulty
+    ref_router = ReplicaRouter([make_engine(cfg, params) for _ in range(2)],
+                               warn=quiet)
+    ref = run_rounds(ref_router, prompts, sessions)
+    got = run_rounds(rt, prompts, sessions)
+    assert got == ref
+    assert rt.health[victim] == "dead"
+
+    # the 'process' comes back as a FRESH engine (a real restart loses
+    # device state — only the published store survives) behind the same
+    # router seat
+    engines[victim] = make_engine(cfg, params)
+    faulty.inner = engines[victim]
+    faulty.heal()
+    restored = rt.rejoin(victim)
+    assert rt.health[victim] == "healthy"
+    assert restored > 0, "rejoin should reload the replica's own cache"
+    assert rt.home_of(prompts[0], sessions[0]) == victim  # keys moved back
+    out3 = rt.generate(prompts, sessions=sessions)
+    assert out3 == ref[1]  # steady-state round, token-identical
+    hit = rt.last_stats["per_replica"][victim].get("prefix_hit_tokens", 0)
+    assert hit > 0, "rejoined replica must serve its sessions warm"

@@ -100,8 +100,9 @@ def test_router_round_robin_baseline():
 
 
 def test_router_replica_failure_is_named():
+    """failover=False keeps the legacy abort-the-workload contract."""
     reps = [FakeReplica(), FakeReplica(fail=True)]
-    rt = ReplicaRouter(reps, policy="rr")
+    rt = ReplicaRouter(reps, policy="rr", failover=False)
     with pytest.raises(ReplicaFailed, match="replica 1"):
         rt.generate([[1], [2]])
     assert rt.depth == [0, 0]  # failure still drains accounting
@@ -112,7 +113,7 @@ def test_router_failure_drains_undispatched_tail():
     to replicas after it never reached their own dispatch-side decrement —
     the leaked depth permanently skewed every future spill decision."""
     reps = [FakeReplica(fail=True), FakeReplica(), FakeReplica()]
-    rt = ReplicaRouter(reps, policy="rr")
+    rt = ReplicaRouter(reps, policy="rr", failover=False)
     with pytest.raises(ReplicaFailed, match="replica 0"):
         rt.generate([[1], [2], [3], [4], [5], [6]])
     assert rt.depth == [0, 0, 0]  # the undispatched tail drained too
@@ -120,6 +121,38 @@ def test_router_failure_drains_undispatched_tail():
     reps[0].fail = False
     rt.generate([[1], [2], [3]])
     assert rt.depth == [0, 0, 0]
+
+
+def test_router_failover_default_rehomes_instead_of_raising():
+    """The new default: the same failing replica costs nothing but a
+    re-home — every request completes on the survivors, the death is
+    accounted, and queue depths still balance."""
+    reps = [FakeReplica(), FakeReplica(fail=True), FakeReplica()]
+    rt = ReplicaRouter(reps, policy="rr", max_retries=0,
+                       warn=lambda m: None)
+    prompts = [[i, i, i] for i in range(9)]
+    out = rt.generate(prompts)
+    assert out == [[p[0], 3] for p in prompts]
+    fo = rt.last_stats["failover"]
+    assert fo["deaths"] == 1 and fo["rehomed_requests"] == 3
+    assert rt.health[1] == "dead"
+    assert rt.depth == [0, 0, 0]
+
+
+def test_router_routes_around_dead_replicas():
+    """Routing (affine AND rr) only considers live replicas; rejoin()
+    brings the dead one back into rotation."""
+    rt = ReplicaRouter([FakeReplica() for _ in range(3)], policy="rr",
+                       warn=lambda m: None)
+    rt.health[1] = rt.DEAD
+    assert [rt.route([9]) for _ in range(4)] == [0, 2, 0, 2]
+    rt.rejoin(1)
+    rt2 = ReplicaRouter([FakeReplica() for _ in range(3)], policy="affine",
+                        warn=lambda m: None)
+    homes = {rt2.home_of([i, i, i]) for i in range(32)}
+    assert homes == {0, 1, 2}  # rendezvous spreads keys over all replicas
+    rt2.health[0] = rt2.DEAD
+    assert {rt2.home_of([i, i, i]) for i in range(32)} == {1, 2}
 
 
 def test_router_rejects_bad_config():

@@ -202,6 +202,45 @@ def test_no_starvation_under_pressure():
     assert all(r["first_emit"] is not None for r in st["requests"])
 
 
+def test_failover_rehomes_qos_to_slo_engine():
+    """Satellite of the failover PR: router failover delivers Request
+    objects (priority, arrival, session, deadline) to a surviving
+    SLOPagedServeEngine INTACT — the survivor's scheduler still preempts
+    the low-priority request for the high-priority arrival, and every
+    output matches an uninterrupted solo run token for token."""
+    from repro.launch.faults import Fault, FaultyReplica
+    from repro.launch.router import ReplicaRouter
+
+    cfg, params = setup("llama3.2-1b")
+    long_p, short_p = prompts_for(cfg)
+    ref_long = solo_ref(cfg, params, long_p)
+    ref_short = solo_ref(cfg, params, short_p)
+
+    def engine():
+        return PG.SLOPagedServeEngine(cfg, params, slots=1, bucket=16,
+                                      max_new_tokens=8, page_size=4,
+                                      segment=1, spill_pages=8)
+
+    # one session => one home => the whole QoS scenario re-homes together
+    reqs = [DL.Request(tokens=tuple(long_p), priority=1, arrival=0,
+                       session="tenant-A"),
+            DL.Request(tokens=tuple(short_p), priority=0, arrival=6,
+                       itl_slo=8.0, session="tenant-A")]
+    engines = [engine(), engine()]
+    rt = ReplicaRouter(engines, max_retries=0, warn=lambda m: None)
+    victim = rt.home_of(reqs[0], "tenant-A")
+    rt.replicas[victim] = FaultyReplica(engines[victim],
+                                        [Fault("raise", 0)])
+    out = rt.generate(reqs)
+    fo = rt.last_stats["failover"]
+    assert fo["deaths"] == 1
+    assert fo["rehomed_requests"] == 2 and fo["rehomed_sessions"] == 1
+    survivor = engines[1 - victim]
+    assert survivor.last_stats["preemptions"] >= 1, \
+        "re-homed QoS must still drive the survivor's scheduler"
+    assert out == [ref_long, ref_short]
+
+
 @pytest.mark.slow
 def test_preempt_resume_program_set():
     """The CI bounded-program gate: the full FIFO-vs-SLO bench workload —
