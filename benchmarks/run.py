@@ -68,6 +68,7 @@ def main() -> None:
         "kv_store": serve_bench.run_kv_store,
         "slo": serve_bench.run_slo,
         "failover": serve_bench.run_failover,
+        "obs": serve_bench.run_obs,
     }
     sel = args.only or list(suites)
     failures = 0

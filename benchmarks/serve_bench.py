@@ -560,6 +560,30 @@ def _slo_eval(trace, stats, outs, wall_s: float) -> dict:
     }
 
 
+def _slo_warmup(eng, cfg, page_size: int, seed: int) -> None:
+    """Absorb every compile on DISJOINT warm-up tokens (identical per
+    engine): a preempting pair exercises segment, reset and the
+    full-cover COW copy; force-demoting the warm pages to the spill
+    tier and re-serving them compiles the promote scatter.  After this
+    the measured run compiles NOTHING, and the radix state the trace
+    sees is untouched by warm-up prefixes (disjoint tokens — the
+    measured hit stats stay first-serve)."""
+    import numpy as np
+
+    import jax
+
+    from repro.runtime import decode_loop as DL
+
+    wrng = np.random.default_rng(seed + 99)
+    wp = wrng.integers(0, cfg.vocab_size, size=3 * page_size).tolist()
+    warm = [DL.Request(tokens=tuple(wp), priority=1, arrival=0),
+            DL.Request(tokens=tuple(wp), priority=0, arrival=2)]
+    eng.generate(warm, key=jax.random.PRNGKey(seed))
+    if eng.kv.radix is not None and eng.kv.spill is not None:
+        eng.kv.radix.evict(len(wp) // page_size)
+    eng.generate(warm, key=jax.random.PRNGKey(seed))
+
+
 def slo_workload(*, seed: int = 0, n_requests: int = 24, slots: int = 2,
                  gen: int = 12, cp: int = 8, page_size: int = 4,
                  spill_pages: int = 32, prefill_budget: int = 2,
@@ -598,21 +622,7 @@ def slo_workload(*, seed: int = 0, n_requests: int = 24, slots: int = 2,
     outs_by_policy = {}
     for policy in ("fifo", "slo"):
         eng = PG.SLOPagedServeEngine(cfg, params, policy=policy, **kw)
-        # absorb every compile on DISJOINT warm-up tokens (identical
-        # per-policy): a preempting pair exercises segment, reset and the
-        # full-cover COW copy; force-demoting the warm pages to the spill
-        # tier and re-serving them compiles the promote scatter.  After
-        # this the measured run compiles NOTHING, and the radix state the
-        # trace sees is untouched by warm-up prefixes (disjoint tokens —
-        # the measured hit stats stay first-serve)
-        wrng = np.random.default_rng(seed + 99)
-        wp = wrng.integers(0, cfg.vocab_size, size=3 * page_size).tolist()
-        warm = [DL.Request(tokens=tuple(wp), priority=1, arrival=0),
-                DL.Request(tokens=tuple(wp), priority=0, arrival=2)]
-        eng.generate(warm, key=jax.random.PRNGKey(seed))
-        if eng.kv.radix is not None and eng.kv.spill is not None:
-            eng.kv.radix.evict(len(wp) // page_size)
-        eng.generate(warm, key=jax.random.PRNGKey(seed))
+        _slo_warmup(eng, cfg, page_size, seed)
         programs_before = dict(eng.compiled_programs())
         t0 = time.perf_counter()
         outs = eng.generate(dl_reqs, key=jax.random.PRNGKey(seed))
@@ -661,6 +671,122 @@ def run_slo() -> List[str]:
     rows.append(f"bench,slo_outputs_match,{int(r['outputs_match'])},bool")
     for k, v in r["programs"].items():
         rows.append(f"bench,slo_programs_{k},{v},count")
+    return rows
+
+
+def obs_workload(*, seed: int = 0, repeats: int = 4) -> dict:
+    """Telemetry-overhead acceptance workload: the slo trace replayed
+    through two fresh ``SLOPagedServeEngine``s — tracing OFF vs tracing
+    ON — identical warm-up, best-of-``repeats`` wall clock each.  Event
+    recording is a couple of dict appends next to a jitted dispatch, so
+    the measured overhead must stay under 5% (the
+    ``tests/test_bench_schema.py`` acceptance bar).  The traced engine's
+    first measured run also feeds the trace-vs-scheduler cross-check:
+    per-request summaries reconstructed from lifecycle spans alone
+    (``telemetry.request_summaries``) must agree with the engine's own
+    ``last_stats["requests"]`` accounting on first-emit step, token
+    count and preemptions.  Tok/s derives from the registry's
+    ``emitted_tokens`` counter, not a parallel tally."""
+    import jax
+
+    from repro.runtime import decode_loop as DL
+    from repro.runtime import paged as PG
+
+    cfg, params, _, _ = _setup()
+    n_requests, gen, cp, page_size = 24, 12, 8, 4
+    trace = traffic_trace(seed=seed, n_requests=n_requests,
+                          vocab=cfg.vocab_size)
+    dl_reqs = [DL.Request(tokens=r.tokens, priority=r.priority,
+                          arrival=r.arrival, itl_slo=r.itl_slo,
+                          prefill_chunks=r.prefill_chunks, tier=r.tier)
+               for r in trace]
+    longest = max(len(r.tokens) for r in trace)
+    kw = dict(slots=2, bucket=longest + gen, max_new_tokens=gen,
+              segment=1, prefill_chunk=cp, page_size=page_size,
+              spill_pages=32, prefill_budget=2)
+    out = {"seed": seed, "repeats": repeats, "n_requests": n_requests}
+    engines = {}
+    for mode in ("untraced", "traced"):
+        eng = PG.SLOPagedServeEngine(cfg, params, policy="slo", **kw)
+        eng.telemetry.set_tracing(False)  # warm-up stays out of the trace
+        _slo_warmup(eng, cfg, page_size, seed)
+        engines[mode] = eng
+    engines["traced"].telemetry.set_tracing(True)
+    # interleave the modes (flipping who goes first each round) so
+    # process-level warm-up and drift hit both evenly — a sequential
+    # all-of-one-then-all-of-the-other sweep systematically favors
+    # whichever runs second
+    best = {m: float("inf") for m in engines}
+    emitted = {m: 0 for m in engines}
+    traced_runs = 0
+    for i in range(repeats):
+        order = ("untraced", "traced") if i % 2 == 0 \
+            else ("traced", "untraced")
+        for mode in order:
+            eng = engines[mode]
+            tok0 = eng.telemetry.registry.value("emitted_tokens")
+            t0 = time.perf_counter()
+            eng.generate(dl_reqs, key=jax.random.PRNGKey(seed))
+            wall = time.perf_counter() - t0
+            best[mode] = min(best[mode], wall)
+            emitted[mode] = \
+                eng.telemetry.registry.value("emitted_tokens") - tok0
+            if mode == "traced":
+                traced_runs += 1
+                if traced_runs == 1:
+                    # cross-check while the trace holds exactly one run
+                    summ = eng.telemetry.request_summaries()
+                    st = eng.last_stats
+                    ok = len(summ) >= n_requests
+                    for ridx, rs in enumerate(st["requests"]):
+                        s = summ.get(ridx)
+                        ok = ok and s is not None \
+                            and s["first_emit"] == rs["first_emit"] \
+                            and s["n_emitted"] == rs["n_emitted"] \
+                            and s["preemptions"] == rs["preemptions"]
+                    out["summary_consistent"] = ok
+                    out["preemptions"] = st["preemptions"]
+                    out["trace_events"] = \
+                        len(eng.telemetry.tracer.events)
+    for mode, eng in engines.items():
+        out[mode] = {"tok_per_s": round(emitted[mode] / best[mode], 1),
+                     "best_s": best[mode], "emitted": emitted[mode]}
+        out[f"programs_{mode}"] = dict(eng.compiled_programs())
+        out[f"alerts_{mode}"] = eng.telemetry.alerts()
+    out["programs"] = out["programs_traced"]
+    out["overhead_pct"] = round(
+        (out["traced"]["best_s"] - out["untraced"]["best_s"])
+        / out["untraced"]["best_s"] * 100, 2)
+    return out
+
+
+def run_obs() -> List[str]:
+    """benchmarks.run entry for the ``obs`` suite: telemetry overhead +
+    trace fidelity.  Acceptance claims (checked against the committed
+    ``BENCH_obs.json`` by ``tests/test_bench_schema.py``): tracing costs
+    < 5% tok/s, the compiled-program set is unchanged by tracing (still
+    <= 1 each of {segment, reset, copy, promote}, zero alerts), and
+    per-request summaries reconstructed from the trace match the
+    scheduler's own accounting."""
+    r = obs_workload()
+    for mode in ("untraced", "traced"):
+        print(f"{mode:>9s}: {r[mode]['tok_per_s']} tok/s "
+              f"({r[mode]['emitted']} tokens, best of {r['repeats']}) "
+              f"programs={r[f'programs_{mode}']} "
+              f"alerts={r[f'alerts_{mode}']}")
+    print(f"overhead={r['overhead_pct']}% trace_events={r['trace_events']} "
+          f"summary_consistent={r['summary_consistent']}")
+    rows = ["bench,name,value,derived"]
+    for mode in ("untraced", "traced"):
+        rows.append(f"bench,obs_tok_per_s_{mode},{r[mode]['tok_per_s']},tok/s")
+    rows.append(f"bench,obs_overhead_pct,{r['overhead_pct']},pct")
+    rows.append(f"bench,obs_trace_events,{r['trace_events']},count")
+    rows.append(f"bench,obs_preemptions,{r['preemptions']},count")
+    rows.append(f"bench,obs_summary_consistent,"
+                f"{int(r['summary_consistent'])},bool")
+    rows.append(f"bench,obs_alerts,{r['alerts_traced']},count")
+    for k, v in r["programs"].items():
+        rows.append(f"bench,obs_programs_{k},{v},count")
     return rows
 
 

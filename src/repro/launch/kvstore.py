@@ -23,7 +23,9 @@ process — the in-process analogue of reading a crashed peer's store.
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.runtime import telemetry as TM
 
 __all__ = ["SharedKVStore"]
 
@@ -31,11 +33,19 @@ __all__ = ["SharedKVStore"]
 class SharedKVStore:
     """One npz prefix-cache file per replica under a shared root dir."""
 
-    def __init__(self, root: str):
+    def __init__(self, root: str,
+                 telemetry: Optional[TM.Telemetry] = None):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.published_pages: Dict[int, int] = {}  # replica -> pages in file
         self.errors = 0  # swallowed best-effort failures (for stats only)
+        self.telemetry = telemetry if telemetry is not None \
+            else TM.Telemetry(component="kvstore")
+
+    def _event(self, kind: str, replica: int, pages: int) -> None:
+        self.telemetry.registry.counter(f"{kind.replace('.', '_')}").inc()
+        self.telemetry.registry.counter("kvstore_pages_moved").inc(pages)
+        self.telemetry.event(kind, replica=replica, pages=pages)
 
     def path(self, replica: int) -> str:
         return os.path.join(self.root, f"replica{int(replica)}.npz")
@@ -49,8 +59,10 @@ class SharedKVStore:
             n = int(engine.save_kv_store(self.path(replica)))
         except Exception:
             self.errors += 1
+            self.telemetry.registry.counter("kvstore_errors").inc()
             return 0
         self.published_pages[replica] = n
+        self._event("kvstore.publish", replica, n)
         return n
 
     def recover(self, dead: int, survivors: Sequence[Any]) -> int:
@@ -69,6 +81,8 @@ class SharedKVStore:
                 total += int(eng.restore_kv_store(p))
             except Exception:
                 self.errors += 1
+                self.telemetry.registry.counter("kvstore_errors").inc()
+        self._event("kvstore.recover", dead, total)
         return total
 
     def restore_self(self, replica: int, engine: Any) -> int:
@@ -78,10 +92,13 @@ class SharedKVStore:
         if not os.path.exists(p):
             return 0
         try:
-            return int(engine.restore_kv_store(p))
+            n = int(engine.restore_kv_store(p))
         except Exception:
             self.errors += 1
+            self.telemetry.registry.counter("kvstore_errors").inc()
             return 0
+        self._event("kvstore.restore_self", replica, n)
+        return n
 
     def __repr__(self):
         return (f"SharedKVStore({self.root!r}, "

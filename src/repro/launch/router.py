@@ -66,6 +66,8 @@ import warnings
 import zlib
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro.runtime import telemetry as TM
+
 __all__ = ["AllReplicasDead", "IncompleteGeneration", "ReplicaFailed",
            "ReplicaRouter"]
 
@@ -184,8 +186,16 @@ class ReplicaRouter:
         self.health = [self.HEALTHY] * len(self.replicas)
         self.last_cause: List[Optional[BaseException]] = \
             [None] * len(self.replicas)
-        self.last_stats: Dict[str, Any] = {}
-        # cumulative across generate() calls (deaths survive a workload)
+        # the router's own telemetry (stdlib-only — stays framework-free);
+        # its step clock is the dispatch sequence number
+        self.telemetry = TM.Telemetry(component="router")
+        self.last_stats: Dict[str, Any] = self.telemetry.stats_view()
+        self._dispatch_seq = 0
+        # lifetime counters, cumulative across generate() calls (deaths
+        # survive a workload); mirrored as registry counters
+        # router_deaths/router_retries/router_timeouts.  Per-call deltas
+        # live in last_stats["failover"] — semantics pinned by
+        # tests/test_telemetry.py::test_failover_per_call_vs_lifetime
         self.deaths = 0
         self.retries = 0
         self.timeouts = 0
@@ -205,6 +215,8 @@ class ReplicaRouter:
         restored = 0
         if self.kv_store is not None:
             restored = self.kv_store.restore_self(r, self.replicas[r])
+        self.telemetry.event("router.rejoin", replica=r,
+                             step=self._dispatch_seq, pages=restored)
         return restored
 
     # -- placement -------------------------------------------------------
@@ -257,12 +269,18 @@ class ReplicaRouter:
         """One guarded dispatch: raises on replica exception, on a
         short/long output list, and on wall-clock past the timeout (the
         late result is discarded — its replica may be wedged)."""
+        self._dispatch_seq += 1
+        seq = self._dispatch_seq
         t0 = time.perf_counter()
         got = self.replicas[r].generate(batch)
         elapsed = time.perf_counter() - t0
+        self.telemetry.event("router.dispatch", replica=r, step=seq,
+                             n=len(batch), dur_ms=elapsed * 1e3)
         if (self.dispatch_timeout is not None
                 and elapsed > self.dispatch_timeout):
             self.timeouts += 1
+            self.telemetry.registry.counter("router_timeouts").inc()
+            self.telemetry.event("router.timeout", replica=r, step=seq)
             raise _DispatchTimeout(elapsed, self.dispatch_timeout)
         if got is None or len(got) != len(batch):
             raise _ShortOutput(0 if got is None else len(got), len(batch))
@@ -282,6 +300,10 @@ class ReplicaRouter:
                 self.health[r] = self.SUSPECT
                 if attempt < self.max_retries:
                     self.retries += 1
+                    self.telemetry.registry.counter("router_retries").inc()
+                    self.telemetry.event("router.retry", replica=r,
+                                         step=self._dispatch_seq,
+                                         attempt=attempt + 1)
                     if delay > 0:
                         time.sleep(min(delay, self.max_backoff_s))
                         delay = min(delay * 2 or self.max_backoff_s,
@@ -289,6 +311,9 @@ class ReplicaRouter:
                     continue
                 self.health[r] = self.DEAD
                 self.deaths += 1
+                self.telemetry.registry.counter("router_deaths").inc()
+                self.telemetry.event("router.death", replica=r,
+                                     step=self._dispatch_seq)
                 return None
             self.health[r] = self.HEALTHY
             return got
@@ -322,8 +347,12 @@ class ReplicaRouter:
         if self.kv_store is None:
             return 0
         self.kv_store.publish(r, self.replicas[r])
-        return self.kv_store.recover(
+        pages = self.kv_store.recover(
             r, [self.replicas[s] for s in self.live()])
+        self.telemetry.event("router.recover", replica=r,
+                             step=self._dispatch_seq, pages=pages,
+                             survivors=len(self.live()))
+        return pages
 
     def generate(self, prompts: Sequence[Sequence[int]],
                  sessions: Optional[Sequence[Optional[str]]] = None,
@@ -394,7 +423,7 @@ class ReplicaRouter:
             for i, o in zip(idxs, got):
                 outs[i] = o
             self._accumulate_engine_stats(r, per_replica[r])
-        self.last_stats = {}
+        self.last_stats = self.telemetry.stats_view()
 
     def _generate_failover(self, prompts, sessions, assigned, outs,
                            per_replica, t0) -> None:
@@ -416,6 +445,9 @@ class ReplicaRouter:
                 r2 = self.route(prompts[i], sessions[i])
                 requeues[r2].append(i)
                 rehomed_idx.append(i)
+                self.telemetry.event("router.rehome", request=i,
+                                     session=sessions[i], replica=r2,
+                                     step=self._dispatch_seq, dead=dead)
                 if sessions[i] is not None:
                     rehomed_sessions.add(sessions[i])
 
@@ -463,7 +495,11 @@ class ReplicaRouter:
                 if self.kv_store is not None:
                     self.kv_store.publish(r, self.replicas[r])
 
-        self.last_stats = {"failover": {
+        # per-call deltas (counters reset to this workload's contribution)
+        # PLUS an explicit lifetime view: the registry's
+        # router_deaths/retries/timeouts counters accumulate forever,
+        # the failover_* gauges hold the last call's deltas
+        fo = {
             "deaths": self.deaths - deaths0,
             "dead": [r for r in range(R) if self.health[r] == self.DEAD],
             "retries": self.retries - retries0,
@@ -474,4 +510,12 @@ class ReplicaRouter:
             "recovered_pages": recovered_pages,
             "health": list(self.health),
             "live": len(self.live()),
-        }}
+            "lifetime": {"deaths": self.deaths, "retries": self.retries,
+                         "timeouts": self.timeouts},
+        }
+        for k in ("deaths", "retries", "timeouts", "rehomed_requests",
+                  "rehomed_sessions", "recovered_prefix_tokens",
+                  "recovered_pages"):
+            self.telemetry.registry.gauge(f"failover_{k}").set(fo[k])
+        self.last_stats = self.telemetry.stats_view()
+        self.last_stats["failover"] = fo

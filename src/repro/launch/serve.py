@@ -86,6 +86,19 @@ class _MeshReplica:
         return self.engine.last_stats
 
 
+def _export_telemetry(args, telemetries):
+    """--trace-out / --metrics-out: dump the run's telemetry to disk."""
+    from repro.runtime import telemetry as TM
+
+    if args.trace_out:
+        doc = TM.write_chrome_trace(args.trace_out, telemetries)
+        print(f"[telemetry] wrote {len(doc['traceEvents'])} trace events "
+              f"to {args.trace_out} (open in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        TM.write_prometheus(args.metrics_out, telemetries)
+        print(f"[telemetry] wrote metrics registry to {args.metrics_out}")
+
+
 def _engine_main(args):
     import jax
     import numpy as np
@@ -194,6 +207,17 @@ def _engine_main(args):
         if args.kv_store:
             n = engine.save_kv_store(args.kv_store)
             print(f"[kv-store] saved {n} prefix pages to {args.kv_store}")
+    if args.trace_out and args.sched:
+        # one-line per-request digest reconstructed from the trace alone
+        summ = engine.telemetry.request_summaries()
+        for r in sorted(summ):
+            s = summ[r]
+            print(f"  req {r}: ttft {s['ttft']} steps, itl p50/p95 "
+                  f"{s['itl_p50']}/{s['itl_p95']}, queue wait "
+                  f"{s['queue_wait']}, {s['n_emitted']} tokens, "
+                  f"{s['preemptions']} preemptions, "
+                  f"{s['prefix_hit_tokens']} prefix-hit")
+    _export_telemetry(args, engine.telemetry)
 
 
 def _mesh_engine_main(args, cfg, params, prompts):
@@ -282,6 +306,16 @@ def _mesh_engine_main(args, cfg, params, prompts):
               f"restored), {fo['live']}/{n} replicas live")
     elif fo:
         print(f"  failover: clean run, {fo['live']}/{n} replicas live")
+    if args.trace_out or args.metrics_out:
+        tels = [router.telemetry]
+        for r, rep in enumerate(replicas):
+            # FaultyReplica.__getattr__ forwards to the wrapped replica
+            tel = rep.engine.telemetry
+            tel.replica = r  # label the replica's track group in the trace
+            tels.append(tel)
+        if kv_store is not None:
+            tels.append(kv_store.telemetry)
+        _export_telemetry(args, tels)
 
 
 def main():
@@ -367,10 +401,21 @@ def main():
                          "death the dead replica's published cache "
                          "restores into survivors so re-homed requests "
                          "resume warm")
+    ap.add_argument("--trace-out", default="",
+                    help="with --engine: write the run's lifecycle spans "
+                         "as Chrome trace-event JSON (open in Perfetto or "
+                         "chrome://tracing; one process per engine/router, "
+                         "one track per slot)")
+    ap.add_argument("--metrics-out", default="",
+                    help="with --engine: write the metrics registry as "
+                         "Prometheus text exposition after the run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.mesh and not args.engine:
         ap.error("--mesh requires --engine")
+    if (args.trace_out or args.metrics_out) and not args.engine:
+        ap.error("--trace-out/--metrics-out export engine telemetry; they "
+                 "require --engine")
     if (args.fault_plan or args.shared_kv_store) and not args.mesh:
         ap.error("--fault-plan/--shared-kv-store act on the replica "
                  "router; they require --mesh (and --replicas > 1 to "

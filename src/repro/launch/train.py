@@ -33,6 +33,12 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", default=None, help="'auto' or a step number")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--trace-out", default="",
+                    help="write per-step train.step spans as Chrome "
+                         "trace-event JSON (Perfetto-viewable)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the step-timing metrics registry as "
+                         "Prometheus text exposition")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -102,6 +108,20 @@ def main():
     ctx = mesh_cm if mesh_cm is not None else _null()
     with ctx:
         loop.run(params, opt_state, start_step=start, put_batch=put)
+    if args.trace_out or args.metrics_out:
+        from repro.runtime import telemetry as TM
+
+        if args.trace_out:
+            doc = TM.write_chrome_trace(args.trace_out, loop.telemetry)
+            print(f"[telemetry] wrote {len(doc['traceEvents'])} trace "
+                  f"events to {args.trace_out}")
+        if args.metrics_out:
+            TM.write_prometheus(args.metrics_out, loop.telemetry)
+            print(f"[telemetry] wrote metrics registry to {args.metrics_out}")
+        h = loop.telemetry.registry.histogram("train_step_ms").summary()
+        print(f"[telemetry] train_step_ms: p50 {h['p50']:.1f} "
+              f"p95 {h['p95']:.1f} mean {h['mean']:.1f} over "
+              f"{h['count']} steps")
 
 
 class _null:

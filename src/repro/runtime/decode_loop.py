@@ -29,7 +29,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
-import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -39,6 +38,7 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.core.parallel import ParallelContext
 from repro.models import serve as SV
+from repro.runtime import telemetry as TM
 
 Params = Dict[str, Any]
 
@@ -259,14 +259,25 @@ def reset_slot(cache: Params, i) -> Params:
 FREE, PREFILL, DECODE = 0, 1, 2
 
 
-def per_engine(fn):
+def per_engine(fn, telemetry: Optional[TM.Telemetry] = None,
+               name: Optional[str] = None):
     """Per-engine jit identity wrapper.  ``jax.jit``'s dispatch cache is
     global, keyed by (function, jit params): two engines built with EQUAL
     shardings over the same module-level function would pool their compile
     counts, corrupting the ``compiled_programs()`` bounded-set accounting
     (an engine would "inherit" another engine's compilations).  Wrapping
-    in a fresh function object keeps the count engine-local."""
+    in a fresh function object keeps the count engine-local.
+
+    With a ``telemetry``, the wrapper doubles as the compile probe: the
+    wrapped python function only executes while jax *traces* — i.e. once
+    per new compiled program — so each call records one ``compile.<name>``
+    event, and growth past the engine's bounded-program budget surfaces
+    as a telemetry alert instead of only a slow-test assert."""
+    label = name or fn.__name__
+
     def wrapped(*args):
+        if telemetry is not None:
+            telemetry.compile_event(label)
         return fn(*args)
 
     wrapped.__name__ = fn.__name__
@@ -430,7 +441,8 @@ class ServeEngine:
         self.n_host_chunks = n_host_chunks
         self.cp = int(prefill_chunk) if prefill_chunk else min(bucket, 64)
         self._stop = tuple(stop_tokens)
-        self.last_stats: Dict[str, Any] = {}
+        self.telemetry = TM.Telemetry(component="engine")
+        self.last_stats: Dict[str, Any] = self.telemetry.stats_view()
         self._build_programs()
 
     # -- compiled programs (subclass hook) -------------------------------
@@ -456,18 +468,20 @@ class ServeEngine:
                                  sampling=self.sampling, stop_tokens=self._stop,
                                  pad_id=self.pad_id)
 
+        tel = self.telemetry
         sh = self._segment_shardings()
         if sh is None:
             self._cache_sh = None
-            self._segment = jax.jit(seg)
-            self._reset = jax.jit(per_engine(reset_slot))
+            self._segment = jax.jit(per_engine(seg, tel, "segment"))
+            self._reset = jax.jit(per_engine(reset_slot, tel, "reset"))
         else:
             in_sh, out_sh = sh
             csh, r = in_sh[0], self.par.ns()
             self._cache_sh = csh
-            self._segment = jax.jit(seg, in_shardings=in_sh,
+            self._segment = jax.jit(per_engine(seg, tel, "segment"),
+                                    in_shardings=in_sh,
                                     out_shardings=out_sh)
-            self._reset = jax.jit(per_engine(reset_slot),
+            self._reset = jax.jit(per_engine(reset_slot, tel, "reset"),
                                   in_shardings=(csh, r), out_shardings=csh)
 
     # -- helpers ---------------------------------------------------------
@@ -555,8 +569,9 @@ class ServeEngine:
         out: List[List[int]] = [[] for _ in prompts]
         B = self.slots
         P, S = self._capacity(prompts)
-        stats: Dict[str, Any] = {"steps": [], "dispatches": 0, "resets": 0,
-                                 "capacity": S, "pending_len": P}
+        stats = self.telemetry.stats_view(
+            {"steps": self.telemetry.steps_ring(), "dispatches": 0,
+             "resets": 0, "capacity": S, "pending_len": P})
         self.last_stats = stats
         cache = self._begin(B, P, S)
         mode = np.full(B, FREE, np.int32)
@@ -581,6 +596,10 @@ class ServeEngine:
                 queue.popleft()
                 owner[s] = idx
                 n = len(prompt)
+                self.telemetry.event(
+                    "request.admit", request=idx, slot=s,
+                    step=stats["dispatches"], prompt_len=n,
+                    prefix_hit=int(resume))
                 pend[s, :n] = list(prompt)
                 pend[s, n:] = self.pad_id
                 plen[s], pfill[s], mode[s] = n, resume, PREFILL
@@ -589,26 +608,31 @@ class ServeEngine:
                 break
             key, sub = jax.random.split(key)
             n_prefilling = int((mode == PREFILL).sum())
-            t0 = time.perf_counter()
-            emits, valids, aux = self._dispatch(
-                cache, mode, tok, pos, sub, rem, pfill, pend, plen)
-            cache = aux["cache"]
-            mode, tok, pos, rem, pfill, em, va = (
-                np.array(x) for x in jax.device_get(
-                    (aux["mode"], aux["tok"], aux["pos"], aux["rem"],
-                     aux["pfill"], emits, valids)))
-            dt = time.perf_counter() - t0
-            stats["dispatches"] += 1
-            stats["steps"].append({"ms": dt * 1e3, "prefilling": n_prefilling,
-                                   "emitted": int(va.sum())})
+            with TM.timed_dispatch(self.telemetry, stats,
+                                   prefilling=n_prefilling) as td:
+                emits, valids, aux = self._dispatch(
+                    cache, mode, tok, pos, sub, rem, pfill, pend, plen)
+                cache = aux["cache"]
+                mode, tok, pos, rem, pfill, em, va = (
+                    np.array(x) for x in jax.device_get(
+                        (aux["mode"], aux["tok"], aux["pos"], aux["rem"],
+                         aux["pfill"], emits, valids)))
+                td.emitted = int(va.sum())
             self._post_dispatch(mode, pfill, plen, pend, owner)
             for s in range(B):
                 if owner[s] is None:
                     continue
-                out[owner[s]].extend(
-                    int(t) for t, v in zip(em[s], va[s]) if v)
+                got = [int(t) for t, v in zip(em[s], va[s]) if v]
+                out[owner[s]].extend(got)
+                if got:
+                    self.telemetry.event(
+                        "request.emit", request=owner[s], slot=s,
+                        step=stats["dispatches"], n=len(got))
                 if mode[s] == FREE:
                     self._release(s)
+                    self.telemetry.event(
+                        "request.complete", request=owner[s], slot=s,
+                        step=stats["dispatches"], n=len(out[owner[s]]))
                     owner[s] = None
         self._end(cache)
         return out
@@ -644,7 +668,11 @@ class BlockingServeEngine:
         self.segment = segment
         stop_tokens = tuple(stop_tokens)
         self._stop_set = frozenset(int(t) for t in stop_tokens)
-        self.last_stats: Dict[str, Any] = {}
+        # three-program engine, and prefill legitimately compiles twice
+        # (batched initial fill + single-row refill) — alert past that
+        self.telemetry = TM.Telemetry(component="blocking-engine",
+                                      program_limit=2)
+        self.last_stats: Dict[str, Any] = self.telemetry.stats_view()
         if n_host_chunks and self.max_len % n_host_chunks:
             # models/serve.py silently falls back to on-device attention for
             # non-dividing chunk counts — the operator would be serving a
@@ -658,7 +686,8 @@ class BlockingServeEngine:
             return SV.prefill_step(cfg, par, params, {"tokens": toks},
                                    max_len=self.max_len, lengths=lengths)
 
-        self._prefill = jax.jit(prefill)
+        self._prefill = jax.jit(per_engine(prefill, self.telemetry,
+                                           "prefill"))
 
         def decode_seg(cache, tok, pos, key, done, rem):
             return decode_tokens(cfg, par, params, cache, tok, pos,
@@ -667,8 +696,10 @@ class BlockingServeEngine:
                                  pad_id=pad_id, key=key, done=done,
                                  remaining=rem)
 
-        self._decode = jax.jit(decode_seg)
-        self._insert = jax.jit(insert_slot)
+        self._decode = jax.jit(per_engine(decode_seg, self.telemetry,
+                                          "decode"))
+        self._insert = jax.jit(per_engine(insert_slot, self.telemetry,
+                                          "insert"))
 
     # -- helpers ---------------------------------------------------------
     def _pad(self, rows: List[List[int]]) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -694,7 +725,10 @@ class BlockingServeEngine:
         queue = collections.deque(enumerate(prompts))
         out: List[List[int]] = [[] for _ in prompts]
         B = self.slots
-        stats: Dict[str, Any] = {"steps": [], "dispatches": 0, "refills": 0}
+        stats = self.telemetry.stats_view(
+            {"steps": self.telemetry.steps_ring(), "dispatches": 0,
+             "refills": 0})
+        self.last_stats = stats
 
         # initial fill: pad the first B prompts into one batched prefill;
         # short queues fill trailing slots with a dummy row that starts done
@@ -723,48 +757,48 @@ class BlockingServeEngine:
         tok = tok[:, None]
 
         while not all(o is None for o in owner):
-            t0 = time.perf_counter()
-            n_refills = 0
-            rem_before = rem
-            toks_seg, aux = self._decode(cache, tok, pos, key, done, rem)
-            cache, tok, pos, key = aux["cache"], aux["tok"], aux["pos"], aux["key"]
-            done, rem = aux["done"], aux["remaining"]
-            emitted = jax.device_get(rem_before - rem)
-            seg_host = jax.device_get(toks_seg)
-            done_host = jax.device_get(done)
-            stats["dispatches"] += 1
-            for s in range(B):
-                if owner[s] is None:
-                    continue
-                out[owner[s]].extend(int(t) for t in seg_host[s, : emitted[s]])
-                if not done_host[s]:
-                    continue
-                if not queue:  # finished, nothing queued: park the slot
-                    owner[s] = None
-                    continue
-                # slot reuse: single-row position-masked prefill + insert —
-                # synchronous: every other slot stalls for the full prefill
-                idx, prompt = queue.popleft()
-                toks1, len1 = self._pad([list(prompt)])
-                logits1, cache1 = self._prefill(
-                    toks1, None if len(prompt) == self.bucket else len1)
-                key, sub = jax.random.split(key)
-                t0tok = sample_token(logits1[:, : self.cfg.vocab_size], sub,
-                                     self.sampling)
-                cache = self._insert(cache, cache1, s)
-                n_refills += 1
-                stats["dispatches"] += 2
-                owner[s] = idx
-                out[idx].append(int(t0tok[0]))
-                tok = tok.at[s].set(t0tok)
-                pos = pos.at[s].set(len1[0])
-                done = done.at[s].set(int(t0tok[0]) in self._stop_set
-                                      or self.max_new <= 1)
-                rem = rem.at[s].set(self.max_new - 1)
-            jax.block_until_ready(tok)
-            stats["refills"] += n_refills
-            stats["steps"].append({"ms": (time.perf_counter() - t0) * 1e3,
-                                   "prefilling": n_refills,
-                                   "emitted": int(emitted.sum())})
-        self.last_stats = stats
+            # the span times the whole stop-the-world segment: decode +
+            # harvest + any synchronous refill prefills (the stall the
+            # fused engine is measured against)
+            with TM.timed_dispatch(self.telemetry, stats) as td:
+                n_refills = 0
+                rem_before = rem
+                toks_seg, aux = self._decode(cache, tok, pos, key, done, rem)
+                cache, tok, pos, key = aux["cache"], aux["tok"], aux["pos"], aux["key"]
+                done, rem = aux["done"], aux["remaining"]
+                emitted = jax.device_get(rem_before - rem)
+                seg_host = jax.device_get(toks_seg)
+                done_host = jax.device_get(done)
+                for s in range(B):
+                    if owner[s] is None:
+                        continue
+                    out[owner[s]].extend(int(t) for t in seg_host[s, : emitted[s]])
+                    if not done_host[s]:
+                        continue
+                    if not queue:  # finished, nothing queued: park the slot
+                        owner[s] = None
+                        continue
+                    # slot reuse: single-row position-masked prefill + insert —
+                    # synchronous: every other slot stalls for the full prefill
+                    idx, prompt = queue.popleft()
+                    toks1, len1 = self._pad([list(prompt)])
+                    logits1, cache1 = self._prefill(
+                        toks1, None if len(prompt) == self.bucket else len1)
+                    key, sub = jax.random.split(key)
+                    t0tok = sample_token(logits1[:, : self.cfg.vocab_size], sub,
+                                         self.sampling)
+                    cache = self._insert(cache, cache1, s)
+                    n_refills += 1
+                    stats["dispatches"] += 2
+                    owner[s] = idx
+                    out[idx].append(int(t0tok[0]))
+                    tok = tok.at[s].set(t0tok)
+                    pos = pos.at[s].set(len1[0])
+                    done = done.at[s].set(int(t0tok[0]) in self._stop_set
+                                          or self.max_new <= 1)
+                    rem = rem.at[s].set(self.max_new - 1)
+                jax.block_until_ready(tok)
+                stats["refills"] += n_refills
+                td.prefilling = n_refills
+                td.emitted = int(emitted.sum())
         return out

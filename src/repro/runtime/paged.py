@@ -49,7 +49,6 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -61,6 +60,7 @@ from repro.core.parallel import ParallelContext
 from repro.models import serve as SV
 from repro.models.transformer import layout_of
 from repro.runtime import decode_loop as DL
+from repro.runtime import telemetry as TM
 
 Params = Dict[str, Any]
 
@@ -228,6 +228,8 @@ class RadixTree:
         self.root = _Node()
         self._clock = 0
         self.pages = 0  # device pages the tree currently references
+        # set by the owning engine: demote/evict decisions trace here
+        self.telemetry: Optional[TM.Telemetry] = None
 
     @property
     def spilled(self) -> int:
@@ -358,11 +360,18 @@ class RadixTree:
             sid = self.spill.alloc() if can_spill else -1
             if sid >= 0:
                 self.spill.write(sid, self.read_page(victim.page))
+                if self.telemetry is not None:
+                    self.telemetry.registry.counter("pool_demotions").inc()
+                    self.telemetry.event("pool.demote", page=int(victim.page),
+                                         spill=int(sid))
                 self.pool.release(victim.page)
                 victim.page, victim.spill = -1, sid
             elif victim.children:
                 continue  # drop would strand spilled descendants: keep
             else:
+                if self.telemetry is not None:
+                    self.telemetry.registry.counter("pool_evictions").inc()
+                    self.telemetry.event("pool.evict", page=int(victim.page))
                 del victim.parent.children[victim.key]
                 self.pool.release(victim.page)
             self.pages -= 1
@@ -861,6 +870,8 @@ class PagedServeEngine(DL.ServeEngine):
                          n_host_chunks=n_host_chunks, sampling=sampling,
                          stop_tokens=stop_tokens, pad_id=pad_id,
                          segment=segment, par=par)
+        if self.kv.radix is not None:
+            self.kv.radix.telemetry = self.telemetry
         if self.cp % self.page_size and self.page_size % self.cp:
             raise ValueError(
                 f"prefill_chunk={self.cp} and page_size={self.page_size} "
@@ -886,6 +897,8 @@ class PagedServeEngine(DL.ServeEngine):
         n = self.kv.save(path, self._read_page)
         self.kv_store_saved_pages = getattr(
             self, "kv_store_saved_pages", 0) + n
+        self.telemetry.registry.counter("kvstore_saved_pages").inc(n)
+        self.telemetry.event("kvstore.save", pages=n)
         return n
 
     def restore_kv_store(self, path: str) -> int:
@@ -894,6 +907,8 @@ class PagedServeEngine(DL.ServeEngine):
         n = self.kv.restore(path)
         self.kv_store_restored_pages = getattr(
             self, "kv_store_restored_pages", 0) + n
+        self.telemetry.registry.counter("kvstore_restored_pages").inc(n)
+        self.telemetry.event("kvstore.restore", pages=n)
         return n
 
     def _offload_pool(self, cache):
@@ -962,13 +977,15 @@ class PagedServeEngine(DL.ServeEngine):
                                     stop_tokens=self._stop,
                                     pad_id=self.pad_id, table=table)
 
+        tel = self.telemetry
         sh = self._segment_shardings()
         if sh is None:
             self._cache_sh = None
-            self._segment = jax.jit(seg)
-            self._reset = jax.jit(DL.per_engine(paged_reset))
-            self._copy = jax.jit(DL.per_engine(copy_page))
-            self._promote = jax.jit(DL.per_engine(promote_page))
+            self._segment = jax.jit(DL.per_engine(seg, tel, "segment"))
+            self._reset = jax.jit(DL.per_engine(paged_reset, tel, "reset"))
+            self._copy = jax.jit(DL.per_engine(copy_page, tel, "copy"))
+            self._promote = jax.jit(
+                DL.per_engine(promote_page, tel, "promote"))
         else:
             # page copy/COW become sharded programs over the same pool
             # layout — each device moves only its own head (or in-page)
@@ -976,19 +993,21 @@ class PagedServeEngine(DL.ServeEngine):
             in_sh, out_sh = sh
             csh, r = in_sh[0], par.ns()
             self._cache_sh = csh
-            self._segment = jax.jit(seg, in_shardings=in_sh,
+            self._segment = jax.jit(DL.per_engine(seg, tel, "segment"),
+                                    in_shardings=in_sh,
                                     out_shardings=out_sh)
-            self._reset = jax.jit(DL.per_engine(paged_reset),
+            self._reset = jax.jit(DL.per_engine(paged_reset, tel, "reset"),
                                   in_shardings=(csh, r, r), out_shardings=csh)
-            self._copy = jax.jit(DL.per_engine(copy_page),
+            self._copy = jax.jit(DL.per_engine(copy_page, tel, "copy"),
                                  in_shardings=(csh, r, r, r),
                                  out_shardings=csh)
             # the promoted rows dict gets `r` as a pytree PREFIX: every
             # host-staged row enters replicated, the scatter re-shards it
             # into the pool's own layout
-            self._promote = jax.jit(DL.per_engine(promote_page),
-                                    in_shardings=(csh, r, r, r),
-                                    out_shardings=csh)
+            self._promote = jax.jit(
+                DL.per_engine(promote_page, tel, "promote"),
+                in_shardings=(csh, r, r, r),
+                out_shardings=csh)
             # commit the persistent pool to its sharding NOW: the first
             # admit otherwise sees uncommitted arrays and compiles a second
             # reset signature, breaking the bounded-program guarantee
@@ -1029,6 +1048,7 @@ class PagedServeEngine(DL.ServeEngine):
         except PoolExhausted as e:
             if active:  # running slots will release pages; retry next round
                 st["deferrals"] += 1
+                self.telemetry.event("pool.defer", request=idx, slot=s)
                 return None
             raise ValueError(str(e)) from None
         ids = np.full(self.n_pages, self.n_pages + 1, np.int32)  # pad -> OOB
@@ -1040,12 +1060,17 @@ class PagedServeEngine(DL.ServeEngine):
             cache = self._promote(cache, jnp.int32(dst), rows,
                                   jnp.int32(keep))
             st["spill_promotes"] += 1
+        if plan.promote:
+            self.telemetry.event("pool.promote", request=idx, slot=s,
+                                 n=len(plan.promote))
         for sid in plan.free_spill:  # scatter dispatched: slot reusable
             self.kv.spill.free(sid)
         for src, dst in plan.cow:
             cache = self._copy(cache, jnp.int32(src), jnp.int32(dst),
                                jnp.int32(plan.resume % self.page_size))
             st["cow_copies"] += 1
+            self.telemetry.event("pool.cow", request=idx, slot=s,
+                                 src=int(src), dst=int(dst))
         # crash consistency: the radix tree now points at the promoted /
         # reset pages, so the pool holding them must survive even if this
         # workload dies before _end (a dispatch failure must not strand
@@ -1215,15 +1240,16 @@ class SLOPagedServeEngine(PagedServeEngine):
         n = len(reqs)
         B = self.slots
         P, S = self._capacity([r.tokens for r in reqs])
-        stats: Dict[str, Any] = {
-            "steps": [], "dispatches": 0, "resets": 0, "capacity": S,
+        stats = self.telemetry.stats_view({
+            "steps": self.telemetry.steps_ring(), "dispatches": 0,
+            "resets": 0, "capacity": S,
             "pending_len": P, "policy": self.policy, "preemptions": 0,
             "prefill_pauses": 0,
             "requests": [{"arrival": int(r.arrival), "priority": r.priority,
                           "tier": r.tier, "prompt_len": len(r.tokens),
                           "admit_step": None, "first_emit": None,
                           "last_emit": None, "max_gap": 0, "preemptions": 0,
-                          "n_emitted": 0} for r in reqs]}
+                          "n_emitted": 0} for r in reqs]})
         self.last_stats = stats
         rstat = stats["requests"]
         cache = self._begin(B, P, S)
@@ -1261,6 +1287,9 @@ class SLOPagedServeEngine(PagedServeEngine):
             burst[s] = 0
             rstat[ridx]["preemptions"] += 1
             stats["preemptions"] += 1
+            self.telemetry.event("request.preempt", request=ridx, slot=s,
+                                 step=step, session=reqs[ridx].session,
+                                 cached=cached)
             nonlocal seq
             heapq.heappush(ready, self._key(reqs[ridx], seq, ridx))
             seq += 1
@@ -1291,10 +1320,17 @@ class SLOPagedServeEngine(PagedServeEngine):
                 mode[s] = DL.PREFILL
                 paused[s] = False
                 burst[s] = 0
+                self.telemetry.event("request.pause_resume",
+                                     request=owner[s], slot=s, step=step)
             # arrivals up to the current step become schedulable
             while fptr < n and reqs[order[fptr]].arrival <= step:
                 ridx = order[fptr]
                 fptr += 1
+                self.telemetry.event(
+                    "request.queued", request=ridx,
+                    session=reqs[ridx].session,
+                    step=int(reqs[ridx].arrival),
+                    priority=reqs[ridx].priority, tier=reqs[ridx].tier)
                 heapq.heappush(ready, self._key(reqs[ridx], ridx, ridx))
             # admission: fill free slots from the ready heap, preempting
             # lower-priority decodes when the head outranks them
@@ -1326,8 +1362,13 @@ class SLOPagedServeEngine(PagedServeEngine):
                 plen[s], pfill[s], mode[s] = np_, resume, DL.PREFILL
                 rem[s], pos[s], tok[s] = budget, 0, self.pad_id
                 burst[s] = 0
-                if rstat[ridx]["admit_step"] is None:
+                first_admit = rstat[ridx]["admit_step"] is None
+                if first_admit:
                     rstat[ridx]["admit_step"] = step
+                self.telemetry.event(
+                    "request.admit" if first_admit else "request.resume",
+                    request=ridx, slot=s, step=step, session=r.session,
+                    prompt_len=np_, prefix_hit=int(resume))
                 progress = True
             if all(o is None for o in owner):
                 if fptr < n:  # idle: jump the clock to the next arrival
@@ -1336,18 +1377,16 @@ class SLOPagedServeEngine(PagedServeEngine):
                 break
             key, sub = jax.random.split(key)
             n_prefilling = int((mode == DL.PREFILL).sum())
-            t0 = time.perf_counter()
-            emits, valids, aux = self._dispatch(
-                cache, mode, tok, pos, sub, rem, pfill, pend, plen)
-            cache = aux["cache"]
-            mode, tok, pos, rem, pfill, em, va = (
-                np.array(x) for x in jax.device_get(
-                    (aux["mode"], aux["tok"], aux["pos"], aux["rem"],
-                     aux["pfill"], emits, valids)))
-            dt = time.perf_counter() - t0
-            stats["dispatches"] += 1
-            stats["steps"].append({"ms": dt * 1e3, "prefilling": n_prefilling,
-                                   "emitted": int(va.sum()), "step": step})
+            with TM.timed_dispatch(self.telemetry, stats,
+                                   prefilling=n_prefilling, step=step) as td:
+                emits, valids, aux = self._dispatch(
+                    cache, mode, tok, pos, sub, rem, pfill, pend, plen)
+                cache = aux["cache"]
+                mode, tok, pos, rem, pfill, em, va = (
+                    np.array(x) for x in jax.device_get(
+                        (aux["mode"], aux["tok"], aux["pos"], aux["rem"],
+                         aux["pfill"], emits, valids)))
+                td.emitted = int(va.sum())
             self._post_dispatch(mode, pfill, plen, pend, owner)
             for s in range(B):
                 if owner[s] is None:
@@ -1363,10 +1402,16 @@ class SLOPagedServeEngine(PagedServeEngine):
                                             step - rs["last_emit"])
                     rs["last_emit"] = step
                     emitted[ridx].extend(toks)
+                    self.telemetry.event(
+                        "request.emit", request=ridx, slot=s, step=step,
+                        session=reqs[ridx].session, n=len(toks))
                 if paused[s]:  # parked: FREE at program level, still owned
                     continue
                 if mode[s] == DL.FREE:
                     self._release(s)
+                    self.telemetry.event(
+                        "request.complete", request=ridx, slot=s, step=step,
+                        session=reqs[ridx].session, n=len(emitted[ridx]))
                     owner[s] = None
             # prefill-chunk budgets: park a long prefill so co-resident
             # decodes get a pure-decode dispatch before it continues
@@ -1386,6 +1431,9 @@ class SLOPagedServeEngine(PagedServeEngine):
                         paused[s] = True
                         skip[s] = 1
                         stats["prefill_pauses"] += 1
+                        self.telemetry.event(
+                            "request.pause", request=owner[s], slot=s,
+                            step=step, session=r.session)
             step += 1
         self._end(cache)
         for i in range(n):

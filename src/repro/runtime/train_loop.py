@@ -26,6 +26,7 @@ from repro.models import transformer as T
 from repro.optim import adamw
 from repro.optim import compression as comp
 from repro.runtime import placement
+from repro.runtime import telemetry as TM
 
 
 @dataclasses.dataclass
@@ -125,6 +126,7 @@ class TrainLoop:
         self.monitor = HeartbeatMonitor(tc.straggler_zscore, tc.straggler_patience)
         self._stop = False
         self.history: list = []
+        self.telemetry = TM.Telemetry(component="train")
 
     def _install_signals(self):
         def handler(signum, frame):
@@ -153,6 +155,11 @@ class TrainLoop:
             dt = time.perf_counter() - t0
             step += 1
             self.history.append({"step": step, "loss": float(metrics["loss"]), "dt": dt})
+            self.telemetry.registry.histogram("train_step_ms").observe(dt * 1e3)
+            self.telemetry.registry.counter("train_steps").inc()
+            self.telemetry.registry.gauge("train_loss").set(float(metrics["loss"]))
+            self.telemetry.event("train.step", step=step, dur_ms=dt * 1e3,
+                                 loss=float(metrics["loss"]))
             if step % self.tc.log_every == 0:
                 print(f"step {step:6d} loss {float(metrics['loss']):.4f} "
                       f"gnorm {float(metrics['grad_norm']):.3f} {dt*1000:.0f}ms")

@@ -118,3 +118,26 @@ def test_bench_failover_acceptance():
         "a rejoined replica must serve its returning sessions warm"
     for prog in ("segment", "reset", "copy", "promote"):
         assert rows[f"failover_programs_{prog}"] <= 1, prog
+
+
+def test_bench_obs_acceptance():
+    """The telemetry claims: tracing the full request lifecycle costs
+    < 5% tok/s, leaves the compiled program set untouched (zero
+    bounded-program-set alerts), and the per-request summaries
+    reconstructed from trace spans alone agree with the scheduler's own
+    accounting (TTFT / token counts / preemptions)."""
+    path = os.path.join(ROOT, "BENCH_obs.json")
+    assert os.path.exists(path), "BENCH_obs.json not committed"
+    with open(path) as f:
+        rows = {r["name"]: r["value"] for r in json.load(f)["obs"]}
+    assert rows["obs_tok_per_s_traced"] > 0
+    assert rows["obs_tok_per_s_untraced"] > 0
+    assert rows["obs_overhead_pct"] < 5, \
+        "tracing must cost < 5% serving throughput"
+    assert rows["obs_trace_events"] > 0
+    assert rows["obs_summary_consistent"] == 1, \
+        "trace-derived summaries must match the scheduler's accounting"
+    assert rows["obs_alerts"] == 0, \
+        "tracing must not perturb the compiled program set"
+    for prog in ("segment", "reset", "copy", "promote"):
+        assert rows[f"obs_programs_{prog}"] <= 1, prog
